@@ -1,0 +1,52 @@
+"""Shared benchmark plumbing: setup factories and CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Tuple
+
+from repro.core import (BypassL2FwdServer, KernelStackServer, LoadGen,
+                        PacketPool, Port, TrafficPattern,
+                        find_max_sustainable_bandwidth)
+from repro.core.cost import HostCostModel
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    line = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(line)
+    print(line, flush=True)
+
+
+def make_setup(stack: str, nports: int = 1, ring: int = 1024,
+               writeback_threshold: int = 32, burst: int = 64,
+               pool_slots: int = 16384,
+               cost: Optional[HostCostModel] = None,
+               sockbuf_budget: int = 16) -> Callable:
+    """Returns a fresh-state factory for MSB searches / timed runs."""
+
+    def factory() -> Tuple[object, List[Port]]:
+        pool = PacketPool(pool_slots, 1518)
+        ports = [Port.make(pool, ring_size=ring,
+                           writeback_threshold=writeback_threshold)
+                 for _ in range(nports)]
+        if stack == "bypass":
+            return BypassL2FwdServer(ports, burst_size=burst), ports
+        return KernelStackServer(ports, cost_model=cost or HostCostModel(),
+                                 sockbuf_budget=sockbuf_budget), ports
+
+    return factory
+
+
+def msb(stack: str, trial_s: float = 0.12, **kw) -> Tuple[float, float]:
+    """(max sustainable Gbps, us per packet at that rate)."""
+    f = make_setup(stack, **kw)
+    gbps, reports = find_max_sustainable_bandwidth(
+        f, trial_s=trial_s, refine_iters=4, start_gbps=0.1)
+    good = [r for r in reports if r.drop_pct == 0 and r.received > 0]
+    us_per_pkt = 0.0
+    if good:
+        best = max(good, key=lambda r: r.achieved_gbps)
+        if best.achieved_mpps > 0:
+            us_per_pkt = 1.0 / best.achieved_mpps
+    return gbps, us_per_pkt

@@ -1,0 +1,29 @@
+"""Paper Fig. 3(a): maximum sustainable bandwidth vs. #NIC ports,
+Linux-kernel stack (iperf analogue) vs. DPDK bypass stack (L2Fwd analogue).
+
+Paper's claims to reproduce: (1) bypass ≫ kernel at every port count
+(5.4×/4.9× at 1/4 NICs in the paper); (2) bypass retains its advantage as
+ports scale.  NOTE: this container has ONE core, so aggregate scaling with
+ports is GIL-bound for both stacks; the per-stack RATIO is the reproduced
+quantity (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from .common import emit, msb
+
+
+def run(trial_s: float = 0.12) -> dict:
+    out = {}
+    for nports in (1, 2, 3, 4):
+        b_gbps, b_us = msb("bypass", trial_s=trial_s, nports=nports)
+        k_gbps, k_us = msb("kernel", trial_s=trial_s, nports=nports)
+        ratio = b_gbps / k_gbps if k_gbps > 0 else float("inf")
+        out[nports] = (b_gbps, k_gbps, ratio)
+        emit(f"fig3a_bypass_{nports}port", b_us, f"msb_gbps={b_gbps:.3f}")
+        emit(f"fig3a_kernel_{nports}port", k_us, f"msb_gbps={k_gbps:.3f}")
+        emit(f"fig3a_ratio_{nports}port", 0.0, f"bypass_over_kernel={ratio:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""Kernel microbenchmarks: wall-clock of the jitted production (chunked-jnp)
+paths on CPU, plus flops-based derived throughput.  The Pallas kernels target
+TPU (interpret mode is a correctness harness, not a benchmark) — their roofline
+behaviour is captured by the dry-run analysis instead.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+from .common import emit
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+
+    # flash attention (chunked), causal 2k
+    B, S, H, Hkv, Dh = 1, 2048, 8, 4, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, Dh)), jnp.float32)
+    f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, impl="chunked"))
+    us = _time(f, q, k, v)
+    flops = 4.0 * B * S * S * H * Dh
+    emit("kernel_flash_attn_2k", us, f"gflops_s={flops/us/1e3:.1f}")
+
+    # decode attention, 32k cache
+    S = 32768
+    q1 = jnp.asarray(rng.normal(size=(4, H, Dh)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(4, S, Hkv, Dh)), jnp.bfloat16)
+    vc = jnp.asarray(rng.normal(size=(4, S, Hkv, Dh)), jnp.bfloat16)
+    cl = jnp.full((4,), S, jnp.int32)
+    f = jax.jit(lambda q, k, v, c: ops.decode_attention(q, k, v, c,
+                                                        impl="chunked"))
+    us = _time(f, q1, kc, vc, cl)
+    bytes_ = kc.nbytes + vc.nbytes
+    emit("kernel_decode_attn_32k", us, f"gb_s={bytes_/us/1e3:.2f}")
+
+    # rg-lru associative scan
+    B, S, W = 2, 4096, 1024
+    x = jnp.asarray(rng.normal(size=(B, S, W)), jnp.float32)
+    al = jnp.asarray(-np.abs(rng.normal(size=(B, S, W))) * 0.3, jnp.float32)
+    f = jax.jit(lambda x, a: ops.rglru_scan(x, a, impl="chunked")[0])
+    us = _time(f, x, al)
+    emit("kernel_rglru_4k", us, f"melem_s={B*S*W/us:.1f}")
+
+    # mamba2 ssd
+    B, S, H, P, N = 1, 4096, 16, 64, 64
+    xs = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(size=(B, S, H))) * 0.3 + 0.01,
+                     jnp.float32)
+    A = jnp.asarray(-np.abs(rng.normal(size=(H,))) - 0.1, jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    f = jax.jit(lambda *a: ops.ssd_scan(*a, chunk=128, impl="chunked")[0])
+    us = _time(f, xs, dt, A, Bm, Cm)
+    emit("kernel_ssd_4k", us, f"mtok_s={B*S/us:.2f}")
+
+    # burst gather
+    arena = jnp.asarray(rng.integers(0, 256, size=(4096, 1518)), jnp.uint8)
+    slots = jnp.asarray(rng.permutation(4096)[:256], jnp.int32)
+    lens = jnp.asarray(rng.integers(64, 1518, size=(256,)), jnp.int32)
+    f = jax.jit(lambda a, s, l: ops.burst_gather(a, s, l, 1518,
+                                                 impl="chunked"))
+    us = _time(f, arena, slots, lens)
+    emit("kernel_burst_gather_256pkt", us,
+         f"gb_s={256*1518/us/1e3:.2f}")
+
+
+if __name__ == "__main__":
+    run()

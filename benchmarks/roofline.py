@@ -1,0 +1,82 @@
+"""Roofline table generator: reads dry-run JSONL records and emits the
+per-(arch × shape × mesh) three-term roofline table for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import os
+from collections import OrderedDict
+from typing import Dict, List, Optional
+
+from .common import emit
+
+_RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+# prefer the post-hillclimb fleet; fall back to the paper-faithful baseline
+DEFAULT_PATH = (os.path.join(_RESULTS, "dryrun_final.jsonl")
+                if os.path.exists(os.path.join(_RESULTS, "dryrun_final.jsonl"))
+                else os.path.join(_RESULTS, "dryrun_baseline.jsonl"))
+
+
+def load_records(path: str = DEFAULT_PATH) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    # keep only the LAST record per (arch, shape, mesh) — reruns append
+    by_cell: "OrderedDict[tuple, dict]" = OrderedDict()
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            r = json.loads(line)
+            by_cell[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(by_cell.values())
+
+
+def markdown_table(recs: List[dict], mesh: str = "16x16") -> str:
+    hdr = ("| arch | shape | status | t_comp (s) | t_mem (s) | t_coll (s) | "
+           "bottleneck | useful_flops | mfu_ub |")
+    sep = "|" + "---|" * 9
+    rows = [hdr, sep]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] != "ok":
+            reason = r.get("reason", r.get("error", ""))[:60]
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['status']}: "
+                        f"{reason} | | | | | | |")
+            continue
+        ro = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok "
+            f"| {ro['t_compute_s']:.3f} | {ro['t_memory_s']:.3f} "
+            f"| {ro['t_collective_s']:.3f} | {ro['bottleneck']} "
+            f"| {ro['useful_flops_ratio']:.3f} | {ro['mfu_upper_bound']:.3f} |")
+    return "\n".join(rows)
+
+
+def run(path: str = DEFAULT_PATH) -> None:
+    recs = load_records(path)
+    if not recs:
+        emit("roofline_table", 0.0, "no dry-run records found; run "
+             "launch_dryrun_all.sh first")
+        return
+    n_ok = sum(1 for r in recs if r["status"] == "ok")
+    n_skip = sum(1 for r in recs if r["status"] == "skipped")
+    n_err = len(recs) - n_ok - n_skip
+    emit("roofline_cells", 0.0, f"ok={n_ok};skipped={n_skip};errors={n_err}")
+    for r in recs:
+        if r["status"] != "ok" or r["mesh"] != "16x16":
+            continue
+        ro = r["roofline"]
+        emit(f"roofline_{r['arch']}_{r['shape']}",
+             ro["step_time_lower_bound"] * 1e6 if "step_time_lower_bound" in ro
+             else max(ro["t_compute_s"], ro["t_memory_s"],
+                      ro["t_collective_s"]) * 1e6,
+             f"bottleneck={ro['bottleneck']};"
+             f"t_comp={ro['t_compute_s']:.3f};t_mem={ro['t_memory_s']:.3f};"
+             f"t_coll={ro['t_collective_s']:.3f};"
+             f"useful={ro['useful_flops_ratio']:.3f};"
+             f"mfu_ub={ro['mfu_upper_bound']:.3f}")
+
+
+if __name__ == "__main__":
+    print(markdown_table(load_records()))

@@ -1,0 +1,32 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=["fig3a", "fig3b", "fig4", "latency", "kernels",
+                             "roofline"])
+    ap.add_argument("--trial-s", type=float, default=0.12)
+    args = ap.parse_args()
+
+    from . import (fig3a_scalability, fig3b_sensitivity, fig4_dca_burst,
+                   kernels_bench, roofline, tbl_latency)
+
+    sections = [
+        ("fig3a", lambda: fig3a_scalability.run(trial_s=args.trial_s)),
+        ("fig3b", lambda: fig3b_sensitivity.run(trial_s=args.trial_s)),
+        ("fig4", fig4_dca_burst.run),
+        ("latency", tbl_latency.run),
+        ("kernels", kernels_bench.run),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in sections:
+        if args.only and name != args.only:
+            continue
+        fn()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,35 @@
+"""EtherLoadGen §3.3 statistics table: per-packet RTT distributions.
+
+Mean / median / std / p95 / p99 / p99.9 / max latency and drop % for both
+stacks at fixed offered loads — the 'statistics file' the paper's loadgen
+produces.
+"""
+from __future__ import annotations
+
+from repro.core import LoadGen, TrafficPattern
+
+from .common import emit, make_setup
+
+
+def run(duration_s: float = 0.15) -> dict:
+    out = {}
+    for stack in ("bypass", "kernel"):
+        for rate in (0.25, 0.5, 1.0):
+            server, ports = make_setup(stack)()
+            lg = LoadGen(ports)
+            rep = lg.run(server, TrafficPattern(rate_gbps=rate,
+                                                packet_size=1518),
+                         duration_s=duration_s)
+            s = rep.latency
+            if s is None:
+                continue
+            out[(stack, rate)] = rep
+            emit(f"tbl_latency_{stack}_{rate}gbps", s.mean_ns / 1e3,
+                 f"med_us={s.median_ns/1e3:.1f};p99_us={s.p99_ns/1e3:.1f};"
+                 f"p999_us={s.p999_ns/1e3:.1f};drop_pct={rep.drop_pct:.3f};"
+                 f"achieved_gbps={rep.achieved_gbps:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

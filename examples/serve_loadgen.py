@@ -1,0 +1,17 @@
+"""Serve a small LM under load: prefill/decode with per-request latency stats.
+
+The serving-side use of the paper's methodology: requests are "packets",
+TTFT/per-token latencies are the timestamp-compared RTTs, and the generator
+never drops — all queueing shows up as measured latency.
+
+    PYTHONPATH=src python examples/serve_loadgen.py
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen3-1.7b",
+         "--smoke", "--requests", "8", "--batch", "4", "--prompt-len", "64",
+         "--gen-len", "16"],
+        env={**__import__("os").environ, "PYTHONPATH": "src"}))

@@ -1,0 +1,44 @@
+# The paper's primary contribution: a kernel-bypass network dataplane and a
+# hardware load-generator measurement model, adapted TPU-natively (DESIGN.md §2).
+from .cost import HostCostModel, ZERO_COST, spin_ns
+from .dataplane import BypassDataplane, FeedStats, KernelStackFeed, make_feed
+from .dca import BurstPlan, OccupancyTrace, run_burst_experiment
+from .descriptor import RxDescriptorRing, TxDescriptorRing, STATUS_DONE, STATUS_FREE
+from .kernel_stack import KernelStackServer, KernelStats
+from .loadgen import LoadGen, TrafficPattern, find_max_sustainable_bandwidth
+from .packet import (
+    DEFAULT_MTU,
+    DEFAULT_TS_OFFSET,
+    ETH_HEADER_SIZE,
+    MIN_FRAME,
+    PacketPool,
+    PacketRef,
+    checksum,
+    payload_checksum,
+    read_seq,
+    read_seqs_vec,
+    read_stamp,
+    read_stamps_vec,
+    stamp,
+    swap_macs,
+    swap_macs_vec,
+    write_packets_vec,
+    write_seq,
+)
+from .pmd import BypassL2FwdServer, PipelineServer, Port, ServerStats
+from .rings import SpscRing
+from .telemetry import LatencyRecorder, LatencyStats, RunReport, ThroughputMeter
+
+__all__ = [
+    "BypassDataplane", "BypassL2FwdServer", "BurstPlan", "FeedStats",
+    "HostCostModel", "KernelStackFeed", "KernelStackServer", "KernelStats",
+    "LatencyRecorder", "LatencyStats", "LoadGen", "OccupancyTrace",
+    "PacketPool", "PacketRef", "PipelineServer", "Port", "RunReport",
+    "RxDescriptorRing", "ServerStats", "SpscRing", "ThroughputMeter",
+    "TrafficPattern", "TxDescriptorRing", "ZERO_COST",
+    "checksum", "find_max_sustainable_bandwidth", "make_feed",
+    "payload_checksum", "read_seq", "read_stamp", "run_burst_experiment",
+    "spin_ns", "stamp", "swap_macs", "write_seq",
+    "DEFAULT_MTU", "DEFAULT_TS_OFFSET", "ETH_HEADER_SIZE", "MIN_FRAME",
+    "STATUS_DONE", "STATUS_FREE",
+]

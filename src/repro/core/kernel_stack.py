@@ -1,0 +1,137 @@
+"""Interrupt-driven kernel network stack — the baseline (iperf analogue).
+
+This is the path the paper's DPDK work *bypasses*.  We reproduce its three
+bottlenecks (paper §2) honestly:
+
+1. **Frequent syscalls** — every user-space read()/sendto() crossing pays a
+   modeled syscall cost (see :mod:`repro.core.cost` for why these are modeled
+   rather than executed).
+2. **Buffer copies** — NIC buffer → freshly-allocated "skb" (copy 1, real numpy
+   allocation + copy), then skb → user buffer (copy 2, real), then user buffer
+   → fresh NIC TX buffer (copy 3, real).  Per-packet allocation is real too.
+3. **Interrupt processing** — packets only become visible to the kernel on an
+   interrupt (one per descriptor-writeback event), each paying a modeled
+   interrupt cost; per-packet protocol processing pays a modeled kernel cost.
+
+The contrast server, :class:`repro.core.pmd.BypassL2FwdServer`, does none of
+these: no syscalls, no interrupts, zero copies, no per-packet allocation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .cost import HostCostModel, spin_ns
+from .packet import swap_macs
+from .pmd import Port, ProcessFn, ServerStats
+
+
+@dataclass
+class KernelStats(ServerStats):
+    interrupts: int = 0
+    syscalls: int = 0
+    copies: int = 0
+    copied_bytes: int = 0
+    allocs: int = 0
+
+
+class KernelStackServer:
+    """Interrupt-driven echo/forward server over N ports.
+
+    ``poll_once`` mimics the kernel + application flow for whatever packets an
+    interrupt has made visible: IRQ → skb alloc+copy → protocol processing →
+    read() syscall copy-to-user → application processing → sendto() syscall
+    copy-from-user → TX post.
+    """
+
+    def __init__(
+        self,
+        ports: Sequence[Port],
+        cost_model: Optional[HostCostModel] = None,
+        sockbuf_budget: int = 16,  # packets drained per read() syscall
+        process_fn: Optional[ProcessFn] = None,
+    ):
+        self.ports = list(ports)
+        self.cost = cost_model or HostCostModel()
+        self.sockbuf_budget = sockbuf_budget
+        self.process_fn = process_fn if process_fn is not None else swap_macs
+        self.stats = KernelStats()
+        # socket receive queues (skbs waiting for the app), per port
+        self._sock_queues: List[List[np.ndarray]] = [[] for _ in self.ports]
+
+    # -- kernel half ----------------------------------------------------------
+    def _irq_bottom_half(self, port_idx: int) -> int:
+        """Interrupt: move written-back descriptors into the socket queue."""
+        port = self.ports[port_idx]
+        batch = port.rx.poll(len(port.rx.status))  # kernel drains what's visible
+        if not batch:
+            return 0
+        self.stats.interrupts += 1
+        spin_ns(self.cost.ns(self.cost.interrupt_cycles))
+        q = self._sock_queues[port_idx]
+        for slot, length in batch:
+            # copy 1: NIC DMA buffer -> fresh skb (real alloc + real copy)
+            skb = np.array(port.pool.view(slot, length))  # allocates + copies
+            self.stats.allocs += 1
+            self.stats.copies += 1
+            self.stats.copied_bytes += length
+            port.pool.free(slot)  # NIC buffer recycled immediately (kernel owns skb)
+            spin_ns(self.cost.ns(self.cost.per_packet_kernel_cycles))
+            q.append(skb)
+        return len(batch)
+
+    # -- application half ------------------------------------------------------
+    def _app_read_process_send(self, port_idx: int) -> int:
+        port = self.ports[port_idx]
+        q = self._sock_queues[port_idx]
+        if not q:
+            return 0
+        # read() syscall: drains up to sockbuf_budget skbs into user buffers
+        self.stats.syscalls += 1
+        spin_ns(self.cost.ns(self.cost.syscall_cycles))
+        n = min(self.sockbuf_budget, len(q))
+        done = 0
+        for _ in range(n):
+            skb = q.pop(0)
+            # copy 2: skb -> user buffer (real alloc + copy)
+            user_buf = np.array(skb)
+            self.stats.allocs += 1
+            self.stats.copies += 1
+            self.stats.copied_bytes += len(user_buf)
+            self.process_fn(user_buf)
+            # sendto() syscall per packet + copy 3: user buffer -> NIC TX buffer
+            self.stats.syscalls += 1
+            spin_ns(self.cost.ns(self.cost.syscall_cycles))
+            tx_slot = port.pool.alloc()
+            if tx_slot is None:
+                continue  # pool exhausted: drop on TX
+            length = len(user_buf)
+            port.pool.arena[tx_slot, :length] = user_buf
+            port.pool.lengths[tx_slot] = length
+            self.stats.copies += 1
+            self.stats.copied_bytes += length
+            spin_ns(self.cost.ns(self.cost.per_packet_kernel_cycles))
+            if not port.tx.post(tx_slot, length):
+                port.pool.free(tx_slot)
+            self.stats.rx_packets += 1
+            self.stats.rx_bytes += length
+            done += 1
+        return done
+
+    def poll_once(self) -> int:
+        """One scheduling quantum: service IRQs then let the app run."""
+        total = 0
+        for i in range(len(self.ports)):
+            self._irq_bottom_half(i)
+            total += self._app_read_process_send(i)
+        self.stats.poll_iterations += 1
+        if total == 0:
+            self.stats.empty_polls += 1
+        self.stats.tx_packets = sum(p.tx.posted for p in self.ports)
+        return total
+
+    @property
+    def queued(self) -> int:
+        return sum(len(q) for q in self._sock_queues)

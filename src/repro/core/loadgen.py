@@ -1,0 +1,318 @@
+"""LoadGen — the EtherLoadGen hardware load-generator model (paper §3.3).
+
+"The hardware load generator model can generate packets at arbitrary rates and
+sizes ... parameters are packet rate, packet size, and protocol ... a packet
+trace can be passed ... adds a timestamp to each outgoing packet at a
+configurable offset and compares the timestamp with the current tick on
+incoming packets to compute per-packet round-trip latency ... reports mean,
+median, standard deviation, and tail latency ... a packet drop percentage and
+a histogram ... also supports a bandwidth test mode where it gradually
+increases the bandwidth to find the maximum sustainable bandwidth."
+
+This class implements all of the above against in-process servers
+(:class:`~repro.core.pmd.BypassL2FwdServer` or
+:class:`~repro.core.kernel_stack.KernelStackServer`).  It plays the NIC role on
+the wire side: it DMAs frames into RX descriptor rings and drains TX rings.
+Like its hardware counterpart, the generator itself never drops or delays
+packets — all loss is attributable to the system under test (ring overflow /
+pool exhaustion), which is what "maximum sustainable bandwidth" measures.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Protocol, Sequence, Tuple
+
+import numpy as np
+
+from .packet import (
+    DEFAULT_TS_OFFSET,
+    MIN_FRAME,
+    PacketPool,
+    payload_checksum,
+    read_seq,
+    read_seqs_vec,
+    read_stamp,
+    read_stamps_vec,
+    stamp,
+    write_packets_vec,
+)
+from .pmd import Port
+from .telemetry import LatencyRecorder, RunReport, ThroughputMeter
+
+
+class Server(Protocol):
+    def poll_once(self) -> int: ...
+
+
+@dataclass(frozen=True)
+class TrafficPattern:
+    """Static traffic description (rate/size/pattern), or trace replay."""
+
+    rate_gbps: float = 1.0
+    packet_size: int = 1518
+    kind: str = "uniform"          # uniform | poisson | bursty
+    burst_len: int = 32            # for kind="bursty": packets per burst train
+    trace: Optional[Sequence[Tuple[int, int]]] = None  # [(t_ns_offset, size)]
+    seed: int = 0
+
+    def packets_per_second(self) -> float:
+        return self.rate_gbps * 1e9 / 8.0 / self.packet_size
+
+
+@dataclass
+class _Flight:
+    sent: int = 0
+    received: int = 0
+    integrity_errors: int = 0
+    checksums: dict = field(default_factory=dict)
+
+
+class LoadGen:
+    """Software model of a hardware traffic generator wired to N ports."""
+
+    def __init__(
+        self,
+        ports: Sequence[Port],
+        ts_offset: int = DEFAULT_TS_OFFSET,
+        verify_integrity: bool = False,
+        max_tx_burst: int = 64,
+        latency_capacity_hint: int = 1 << 16,
+    ):
+        self.ports = list(ports)
+        self.ts_offset = ts_offset
+        self.verify_integrity = verify_integrity
+        self.max_tx_burst = max_tx_burst
+        self.latency = LatencyRecorder(latency_capacity_hint)
+        self.meter = ThroughputMeter()
+        self.flight = _Flight()
+        self._next_seq = 0
+
+    # -- wire-side primitives ------------------------------------------------
+    def _send_one(self, port: Port, size: int, now_ns: int,
+                  rng: Optional[np.random.Generator]) -> bool:
+        slot = port.pool.alloc()
+        if slot is None:
+            # Generator out of buffers == system not recycling fast enough.
+            self.flight.sent += 1
+            return False
+        seq = self._next_seq
+        self._next_seq += 1
+        port.pool.write_packet(
+            slot, seq=seq, length=size, ts_offset=self.ts_offset,
+            timestamp_ns=now_ns, fill=(seq & 0xFF) if rng is None else None, rng=rng,
+        )
+        if self.verify_integrity:
+            self.flight.checksums[seq] = payload_checksum(
+                port.pool.view(slot, size), self.ts_offset
+            )
+        self.flight.sent += 1
+        if not port.rx.nic_deliver(slot, size):
+            port.pool.free(slot)  # RX ring overflow → drop at the NIC
+            return False
+        return True
+
+    def _send_burst(self, port: Port, n: int, size: int, now_ns: int) -> int:
+        """Vectorized burst emit (non-integrity fast path). Returns #delivered."""
+        slots = port.pool.alloc_burst(n)
+        self.flight.sent += n
+        if not slots:
+            return 0
+        slots_arr = np.asarray(slots, dtype=np.int64)
+        seqs = np.arange(self._next_seq, self._next_seq + len(slots), dtype=np.int64)
+        self._next_seq += len(slots)
+        write_packets_vec(port.pool, slots_arr, seqs, size, self.ts_offset, now_ns)
+        lengths = np.full(len(slots), size, dtype=np.int32)
+        accepted = port.rx.nic_deliver_burst(slots_arr, lengths)
+        if accepted < len(slots):
+            port.pool.free_burst(slots[accepted:])  # RX overflow → drop at NIC
+        return accepted
+
+    def _drain_port(self, port: Port, now_ns: int) -> int:
+        """Collect forwarded packets from TX; timestamp-compare for RTT."""
+        if not self.verify_integrity:
+            slots, lengths = port.tx.drain_burst(self.max_tx_burst)
+            n = len(slots)
+            if n == 0:
+                return 0
+            stamps = read_stamps_vec(port.pool, slots, self.ts_offset)
+            rtts = np.maximum(0, now_ns - stamps)
+            self.latency.record_many(rtts)
+            self.meter.merge_counts(n, int(lengths.sum()), now_ns, now_ns)
+            self.flight.received += n
+            port.pool.free_burst([int(s) for s in slots])
+            return n
+        done = port.tx.drain(self.max_tx_burst)
+        for slot, length in done:
+            buf = port.pool.view(slot, length)
+            sent_ns = read_stamp(buf, self.ts_offset)
+            rtt = max(0, now_ns - sent_ns)
+            self.latency.record(rtt)
+            self.meter.on_packet(length, now_ns)
+            seq = read_seq(buf)
+            want = self.flight.checksums.pop(seq, None)
+            if want is not None and payload_checksum(buf, self.ts_offset) != want:
+                self.flight.integrity_errors += 1
+            self.flight.received += 1
+            port.pool.free(slot)
+        return len(done)
+
+    # -- closed-loop (deterministic, for tests) -------------------------------
+    def run_closed_loop(self, server: Server, n_packets: int,
+                        packet_size: int = 256, window: int = 32,
+                        rng: Optional[np.random.Generator] = None) -> RunReport:
+        """Send exactly n packets keeping ≤window in flight; fully drain."""
+        sent = 0
+        start = time.perf_counter_ns()
+        while self.flight.received < n_packets:
+            now = time.perf_counter_ns()
+            while sent < n_packets and (sent - self.flight.received) < window:
+                self._send_one(self.ports[sent % len(self.ports)], packet_size, now, rng)
+                sent += 1
+            for port in self.ports:
+                port.rx.flush()  # closed loop: no idle traffic to trigger writeback
+            server.poll_once()
+            now = time.perf_counter_ns()
+            for port in self.ports:
+                self._drain_port(port, now)
+            if time.perf_counter_ns() - start > 60e9:
+                break  # safety: never hang a test
+        return self._report(offered_gbps=0.0)
+
+    # -- open-loop timed run (bandwidth/latency measurement) ------------------
+    def run(self, server: Server, pattern: TrafficPattern,
+            duration_s: float = 0.25, drain_timeout_s: float = 0.5) -> RunReport:
+        """Offered-load run: pace packets at pattern.rate, measure RTT + drops."""
+        rng = np.random.default_rng(pattern.seed)
+        use_rng_payload = self.verify_integrity
+        start = time.perf_counter_ns()
+        end = start + int(duration_s * 1e9)
+        pps = pattern.packets_per_second()
+        trace = list(pattern.trace) if pattern.trace is not None else None
+        trace_i = 0
+        # Poisson pacing: pre-draw inter-arrival jitter factors
+        credit_sent = 0
+        while True:
+            now = time.perf_counter_ns()
+            if now >= end:
+                break
+            # how many packets should have been emitted by now?
+            if trace is not None:
+                while trace_i < len(trace) and trace[trace_i][0] <= now - start:
+                    _, size = trace[trace_i]
+                    self._send_one(self.ports[trace_i % len(self.ports)],
+                                   max(MIN_FRAME, size), now,
+                                   rng if use_rng_payload else None)
+                    trace_i += 1
+            else:
+                target = int((now - start) * 1e-9 * pps)
+                if pattern.kind == "poisson":
+                    # jitter the credit target ±Poisson noise around the mean
+                    target = int(rng.poisson(max(target, 0)))
+                elif pattern.kind == "bursty":
+                    target = (target // pattern.burst_len) * pattern.burst_len
+                burst = min(target - credit_sent, self.max_tx_burst)
+                if burst > 0 and not use_rng_payload:
+                    # vectorized emit, split evenly across ports (multi-NIC)
+                    nports = len(self.ports)
+                    share = burst // nports
+                    extra = burst % nports
+                    for pi, port in enumerate(self.ports):
+                        k = share + (1 if pi < extra else 0)
+                        if k > 0:
+                            self._send_burst(port, k, pattern.packet_size, now)
+                    credit_sent += burst
+                else:
+                    for _ in range(max(0, burst)):
+                        port = self.ports[credit_sent % len(self.ports)]
+                        self._send_one(port, pattern.packet_size, now,
+                                       rng if use_rng_payload else None)
+                        credit_sent += 1
+            server.poll_once()
+            now = time.perf_counter_ns()
+            for port in self.ports:
+                self._drain_port(port, now)
+        # drain in-flight tail so drop accounting is exact
+        drain_end = time.perf_counter_ns() + int(drain_timeout_s * 1e9)
+        while (self.flight.received < self.flight.sent
+               and time.perf_counter_ns() < drain_end):
+            for port in self.ports:
+                port.rx.flush()
+            if server.poll_once() == 0 and all(p.tx.pending == 0 for p in self.ports):
+                # nothing moving and nothing queued: remaining packets were dropped
+                break
+            now = time.perf_counter_ns()
+            for port in self.ports:
+                self._drain_port(port, now)
+        return self._report(offered_gbps=pattern.rate_gbps)
+
+    def _report(self, offered_gbps: float) -> RunReport:
+        rep = RunReport(
+            offered_gbps=offered_gbps,
+            achieved_gbps=self.meter.gbps,
+            achieved_mpps=self.meter.mpps,
+            sent=self.flight.sent,
+            received=self.flight.received,
+            dropped=self.flight.sent - self.flight.received,
+            latency=self.latency.stats(),
+            histogram=self.latency.histogram(),
+        )
+        rep.extras["integrity_errors"] = float(self.flight.integrity_errors)
+        return rep
+
+
+# -- bandwidth test mode ------------------------------------------------------
+
+def find_max_sustainable_bandwidth(
+    make_setup: Callable[[], Tuple[Server, List[Port]]],
+    packet_size: int = 1518,
+    start_gbps: float = 0.25,
+    max_gbps: float = 400.0,
+    trial_s: float = 0.2,
+    drop_tolerance_pct: float = 0.0,
+    refine_iters: int = 5,
+    pattern_kind: str = "uniform",
+) -> Tuple[float, List[RunReport]]:
+    """EtherLoadGen bandwidth-test mode: "gradually increases the bandwidth to
+    find the maximum sustainable bandwidth ... without packet drops."
+
+    Multiplicative increase until the system drops packets, then bisection
+    between the last sustainable and first unsustainable rates.  Every trial
+    uses a fresh server/rings via ``make_setup`` so state never leaks.
+    Returns (msb_gbps, all trial reports).
+    """
+
+    reports: List[RunReport] = []
+
+    def trial(rate: float) -> RunReport:
+        server, ports = make_setup()
+        lg = LoadGen(ports)
+        rep = lg.run(server, TrafficPattern(rate_gbps=rate, packet_size=packet_size,
+                                            kind=pattern_kind), duration_s=trial_s)
+        reports.append(rep)
+        return rep
+
+    # Phase 1: multiplicative ramp
+    good, bad = 0.0, None
+    rate = start_gbps
+    while rate <= max_gbps:
+        rep = trial(rate)
+        if rep.drop_pct <= drop_tolerance_pct and rep.sent > 0:
+            good = max(good, rep.achieved_gbps)
+            rate *= 2.0
+        else:
+            bad = rate
+            break
+    if bad is None:
+        return good, reports
+    # Phase 2: bisection
+    lo, hi = bad / 2.0, bad
+    for _ in range(refine_iters):
+        mid = 0.5 * (lo + hi)
+        rep = trial(mid)
+        if rep.drop_pct <= drop_tolerance_pct and rep.sent > 0:
+            good = max(good, rep.achieved_gbps)
+            lo = mid
+        else:
+            hi = mid
+    return good, reports

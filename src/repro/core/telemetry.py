@@ -1,0 +1,172 @@
+"""Per-packet telemetry: RTT stats, drop accounting, histograms, throughput.
+
+This is the measurement half of EtherLoadGen (paper §3.3): "reports mean,
+median, standard deviation, and tail latency of network packets ... also
+produces a packet drop percentage and a histogram of packet forwarding
+latency."
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class LatencyStats:
+    count: int
+    mean_ns: float
+    median_ns: float
+    std_ns: float
+    p95_ns: float
+    p99_ns: float
+    p999_ns: float
+    max_ns: float
+    min_ns: float
+
+    def as_dict(self) -> Dict[str, float]:
+        return dict(
+            count=self.count, mean_ns=self.mean_ns, median_ns=self.median_ns,
+            std_ns=self.std_ns, p95_ns=self.p95_ns, p99_ns=self.p99_ns,
+            p999_ns=self.p999_ns, max_ns=self.max_ns, min_ns=self.min_ns,
+        )
+
+    def __str__(self) -> str:  # human-readable one-liner for stats files
+        us = 1e3
+        return (
+            f"n={self.count} mean={self.mean_ns/us:.2f}us med={self.median_ns/us:.2f}us "
+            f"std={self.std_ns/us:.2f}us p95={self.p95_ns/us:.2f}us "
+            f"p99={self.p99_ns/us:.2f}us p99.9={self.p999_ns/us:.2f}us "
+            f"max={self.max_ns/us:.2f}us"
+        )
+
+
+class LatencyRecorder:
+    """Append-only RTT recorder with percentile stats + log-bucket histogram."""
+
+    def __init__(self, capacity_hint: int = 1 << 16):
+        self._buf = np.zeros(max(16, capacity_hint), dtype=np.int64)
+        self._n = 0
+
+    def record(self, rtt_ns: int) -> None:
+        if self._n == len(self._buf):
+            self._buf = np.concatenate([self._buf, np.zeros_like(self._buf)])
+        self._buf[self._n] = rtt_ns
+        self._n += 1
+
+    def record_many(self, rtts_ns: np.ndarray) -> None:
+        m = len(rtts_ns)
+        while self._n + m > len(self._buf):
+            self._buf = np.concatenate([self._buf, np.zeros_like(self._buf)])
+        self._buf[self._n : self._n + m] = rtts_ns
+        self._n += m
+
+    @property
+    def count(self) -> int:
+        return self._n
+
+    def values(self) -> np.ndarray:
+        return self._buf[: self._n]
+
+    def stats(self) -> Optional[LatencyStats]:
+        if self._n == 0:
+            return None
+        v = self.values().astype(np.float64)
+        return LatencyStats(
+            count=self._n,
+            mean_ns=float(v.mean()),
+            median_ns=float(np.median(v)),
+            std_ns=float(v.std()),
+            p95_ns=float(np.percentile(v, 95)),
+            p99_ns=float(np.percentile(v, 99)),
+            p999_ns=float(np.percentile(v, 99.9)),
+            max_ns=float(v.max()),
+            min_ns=float(v.min()),
+        )
+
+    def histogram(self, n_buckets: int = 24) -> List[Dict[str, float]]:
+        """Log-spaced latency histogram (the paper's 'histogram of packet
+        forwarding latency')."""
+        if self._n == 0:
+            return []
+        v = self.values().astype(np.float64)
+        lo = max(1.0, float(v.min()))
+        hi = max(lo * 1.0001, float(v.max()))
+        edges = np.logspace(math.log10(lo), math.log10(hi), n_buckets + 1)
+        counts, _ = np.histogram(v, bins=edges)
+        return [
+            {"lo_ns": float(edges[i]), "hi_ns": float(edges[i + 1]), "count": int(counts[i])}
+            for i in range(n_buckets)
+        ]
+
+
+@dataclass
+class ThroughputMeter:
+    """Counts packets/bytes over an interval → Gbps / Mpps."""
+
+    packets: int = 0
+    bytes: int = 0
+    start_ns: Optional[int] = None
+    end_ns: Optional[int] = None
+
+    def on_packet(self, length: int, now_ns: int) -> None:
+        if self.start_ns is None:
+            self.start_ns = now_ns
+        self.end_ns = now_ns
+        self.packets += 1
+        self.bytes += length
+
+    def merge_counts(self, packets: int, nbytes: int, start_ns: int, end_ns: int) -> None:
+        self.packets += packets
+        self.bytes += nbytes
+        self.start_ns = start_ns if self.start_ns is None else min(self.start_ns, start_ns)
+        self.end_ns = end_ns if self.end_ns is None else max(self.end_ns, end_ns)
+
+    @property
+    def elapsed_s(self) -> float:
+        if self.start_ns is None or self.end_ns is None or self.end_ns <= self.start_ns:
+            return 0.0
+        return (self.end_ns - self.start_ns) / 1e9
+
+    @property
+    def gbps(self) -> float:
+        el = self.elapsed_s
+        return (self.bytes * 8 / 1e9 / el) if el > 0 else 0.0
+
+    @property
+    def mpps(self) -> float:
+        el = self.elapsed_s
+        return (self.packets / 1e6 / el) if el > 0 else 0.0
+
+
+@dataclass
+class RunReport:
+    """One benchmark run's stats file — EtherLoadGen's 'statistics file'."""
+
+    offered_gbps: float = 0.0
+    achieved_gbps: float = 0.0
+    achieved_mpps: float = 0.0
+    sent: int = 0
+    received: int = 0
+    dropped: int = 0
+    latency: Optional[LatencyStats] = None
+    histogram: List[Dict[str, float]] = field(default_factory=list)
+    extras: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def drop_pct(self) -> float:
+        return 100.0 * self.dropped / self.sent if self.sent else 0.0
+
+    def summary(self) -> str:
+        lines = [
+            f"offered={self.offered_gbps:.3f}Gbps achieved={self.achieved_gbps:.3f}Gbps "
+            f"({self.achieved_mpps:.3f}Mpps) sent={self.sent} rx={self.received} "
+            f"drops={self.dropped} ({self.drop_pct:.3f}%)"
+        ]
+        if self.latency is not None:
+            lines.append(f"latency: {self.latency}")
+        for k, v in self.extras.items():
+            lines.append(f"{k}={v}")
+        return "\n".join(lines)

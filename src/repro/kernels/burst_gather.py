@@ -1,0 +1,68 @@
+"""Pallas TPU burst gather: descriptor-driven packet-arena → contiguous batch.
+
+This is the paper's DMA path as a TPU kernel: the NIC (loadgen) leaves
+variable-length packets scattered across a pinned arena; consumers want a
+dense (burst, width) tensor.  The descriptor ring (slot indices) is passed as
+a **scalar-prefetch** operand — Pallas reads the indices in SMEM *before*
+issuing each block's HBM→VMEM DMA, which is exactly the descriptor-cache →
+descriptor-driven-DMA structure of a NIC RX queue (§3.1.4), and the burst is
+the DCA staging unit (§5.2): one grid step stages ``blk_n`` packets.
+
+Non-TPU note (DESIGN.md §2): the gem5 changes themselves are register-level
+x86 shims with no TPU analogue; this kernel is the *functional* equivalent —
+userspace-owned descriptor-driven data movement with explicit staging.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(slots_ref, len_ref, arena_ref, out_ref, *, out_width: int):
+    i = pl.program_id(0)
+    # arena_ref block was DMA'd using the prefetched descriptor (see index_map)
+    row = arena_ref[0, :out_width]
+    col = jax.lax.broadcasted_iota(jnp.int32, (out_width,), 0)
+    n = len_ref[i]
+    out_ref[0] = jnp.where(col < n, row, 0).astype(out_ref.dtype)
+
+
+def burst_gather_pallas(
+    arena: jnp.ndarray,    # (n_slots, slot_size) uint8
+    slots: jnp.ndarray,    # (n,) int32 descriptor slot indices
+    lengths: jnp.ndarray,  # (n,) int32
+    out_width: int,
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n = slots.shape[0]
+    slot_size = arena.shape[1]
+    w = min(out_width, slot_size)
+
+    def arena_map(i, slots_s, lens_s):
+        # descriptor-driven DMA: the block row comes from the prefetched ring
+        return (slots_s[i], 0)
+
+    def out_map(i, slots_s, lens_s):
+        return (i, 0)
+
+    kernel = functools.partial(_gather_kernel, out_width=w)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, slot_size), arena_map)],
+        out_specs=pl.BlockSpec((1, w), out_map),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, w), jnp.uint8),
+        interpret=interpret,
+    )(slots.astype(jnp.int32), lengths.astype(jnp.int32), arena)
+    if w < out_width:
+        out = jnp.pad(out, ((0, 0), (0, out_width - w)))
+    return out

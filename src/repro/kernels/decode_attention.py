@@ -1,0 +1,118 @@
+"""Pallas TPU decode attention: one query token vs. a (possibly ring) KV cache.
+
+Flash-decoding layout: grid = (B·H, n_kv_blocks) with the kv dim sequential;
+online-softmax state in VMEM scratch; cache-length masking via a scalar-
+prefetch operand (lengths live in SMEM and are read before the DMA of each
+block — the descriptor-cache pattern from the paper's NIC, applied to VMEM).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, blk_k: int, n_kv_blocks: int, n_heads: int):
+    bh = pl.program_id(0)
+    ki = pl.program_id(1)
+    b = bh // n_heads
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    cache_len = len_ref[b]
+    k_start = ki * blk_k
+
+    @pl.when(k_start < cache_len)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (1, Dh)
+        k = k_ref[0].astype(jnp.float32)          # (blk_k, Dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, blk_k), 1)
+        s = jnp.where(kpos < cache_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                              preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jnp.ndarray,          # (B, H, Dh)
+    k_cache: jnp.ndarray,    # (B, S, Hkv, Dh)
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,  # (B,) i32
+    *,
+    softmax_scale: Optional[float] = None,
+    blk_k: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, Dh = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    group = H // Hkv
+    scale = softmax_scale if softmax_scale is not None else Dh ** -0.5
+    blk_k = min(blk_k, S)
+    pad_k = (-S) % blk_k
+    if pad_k:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    S_p = k_cache.shape[1]
+    nk = S_p // blk_k
+
+    qr = q.reshape(B * H, 1, Dh)
+    kr = k_cache.transpose(0, 2, 1, 3).reshape(B * Hkv, S_p, Dh)
+    vr = v_cache.transpose(0, 2, 1, 3).reshape(B * Hkv, S_p, Dh)
+
+    def q_map(bh, ki, lens):  # grid indices first, scalar-prefetch ref last
+        return (bh, 0, 0)
+
+    def kv_map(bh, ki, lens):
+        b, h = bh // H, bh % H
+        return (b * Hkv + h // group, ki, 0)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, blk_k=blk_k,
+                               n_kv_blocks=nk, n_heads=H)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, Dh), q_map),
+            pl.BlockSpec((1, blk_k, Dh), kv_map),
+            pl.BlockSpec((1, blk_k, Dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Dh), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, Dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * H, 1, Dh), q.dtype),
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), qr, kr, vr)
+    return out.reshape(B, H, Dh)

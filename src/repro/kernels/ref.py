@@ -1,0 +1,156 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground truth the Pallas kernels (and the production chunked-jnp
+paths in ops.py) are validated against in tests — naive, O(S^2)-materializing,
+numerically straightforward.  Use small shapes only.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_mask(
+    s_q: int, s_kv: int, *, causal: bool, window: int = 0, q_offset: int = 0
+) -> jnp.ndarray:
+    """(s_q, s_kv) boolean mask. window>0 limits lookback (sliding/local)."""
+    qpos = jnp.arange(s_q)[:, None] + q_offset
+    kpos = jnp.arange(s_kv)[None, :]
+    mask = jnp.ones((s_q, s_kv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window and window > 0:
+        mask &= kpos > qpos - window
+    return mask
+
+
+def mha(
+    q: jnp.ndarray,  # (B, Sq, H, Dh)
+    k: jnp.ndarray,  # (B, Skv, Hkv, Dh)
+    v: jnp.ndarray,  # (B, Skv, Hkv, Dh)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    softmax_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Naive GQA attention oracle. Returns (B, Sq, H, Dh)."""
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    scale = softmax_scale if softmax_scale is not None else Dh ** -0.5
+    qg = q.reshape(B, Sq, Hkv, group, Dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = attention_mask(Sq, k.shape[1], causal=causal, window=window,
+                          q_offset=q_offset)
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,        # (B, H, Dh) single query token
+    k_cache: jnp.ndarray,  # (B, S, Hkv, Dh)
+    v_cache: jnp.ndarray,  # (B, S, Hkv, Dh)
+    cache_len: jnp.ndarray,  # (B,) valid prefix length (ring-ordered caches
+                             # pass S and handle rotation outside)
+    *,
+    softmax_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Single-token KV-cache attention oracle. Returns (B, H, Dh)."""
+    B, H, Dh = q.shape
+    Hkv = k_cache.shape[2]
+    group = H // Hkv
+    S = k_cache.shape[1]
+    scale = softmax_scale if softmax_scale is not None else Dh ** -0.5
+    qg = q.reshape(B, Hkv, group, Dh)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    valid = jnp.arange(S)[None] < cache_len[:, None]  # (B, S)
+    scores = jnp.where(valid[:, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, Dh).astype(q.dtype)
+
+
+def rglru(
+    x: jnp.ndarray,          # (B, S, W) gated input
+    a_log: jnp.ndarray,      # (B, S, W) log of per-step decay in (0,1)
+) -> jnp.ndarray:
+    """RG-LRU linear recurrence oracle: h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * x_t.
+
+    a = exp(a_log) elementwise in (0, 1).  Sequential reference.
+    """
+    a = jnp.exp(a_log.astype(jnp.float32))
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * x.astype(jnp.float32)
+
+    def step(h, inp):
+        a_t, g_t = inp
+        h = a_t * h + g_t
+        return h, h
+
+    a_sw = jnp.moveaxis(a, 1, 0)       # (S, B, W)
+    g_sw = jnp.moveaxis(gated, 1, 0)
+    h0 = jnp.zeros_like(g_sw[0])
+    _, hs = jax.lax.scan(step, h0, (a_sw, g_sw))
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+
+
+def ssd(
+    x: jnp.ndarray,      # (B, S, H, P)   inputs per head
+    dt: jnp.ndarray,     # (B, S, H)      softplus'd timestep > 0
+    A: jnp.ndarray,      # (H,)           negative decay rate
+    Bmat: jnp.ndarray,   # (B, S, N)      input projection (single group)
+    Cmat: jnp.ndarray,   # (B, S, N)      output projection
+) -> jnp.ndarray:
+    """Mamba-2 SSD oracle (sequential state update). Returns (B, S, H, P).
+
+    h_t = exp(A*dt_t) * h_{t-1} + dt_t * B_t ⊗ x_t ;  y_t = C_t · h_t
+    State h has shape (B, H, P, N).
+    """
+    Bb, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bmat.astype(jnp.float32)
+    Cf = Cmat.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(Af[None] * dt_t)  # (B, H)
+        update = (dt_t[..., None, None] * x_t[..., None]) * b_t[:, None, None, :]
+        h = decay[..., None, None] * h + update  # (B,H,P,N)
+        y = jnp.einsum("bhpn,bn->bhp", h, c_t)
+        return h, y
+
+    xs = jnp.moveaxis(xf, 1, 0)
+    dts = jnp.moveaxis(dtf, 1, 0)
+    bs = jnp.moveaxis(Bf, 1, 0)
+    cs = jnp.moveaxis(Cf, 1, 0)
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (xs, dts, bs, cs))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def burst_gather(
+    arena: jnp.ndarray,   # (n_slots, slot_size) uint8 packet arena
+    slots: jnp.ndarray,   # (n,) int32 descriptor slot indices
+    lengths: jnp.ndarray, # (n,) int32 valid bytes per packet
+    out_width: int,
+) -> jnp.ndarray:
+    """Descriptor-driven gather of a packet burst into a contiguous batch,
+    zero-padded to out_width. Returns (n, out_width) uint8."""
+    rows = arena[slots]  # (n, slot_size)
+    rows = rows[:, :out_width] if rows.shape[1] >= out_width else jnp.pad(
+        rows, ((0, 0), (0, out_width - rows.shape[1]))
+    )
+    col = jnp.arange(out_width)[None, :]
+    return jnp.where(col < lengths[:, None], rows, 0).astype(jnp.uint8)

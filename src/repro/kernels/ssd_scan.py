@@ -1,0 +1,108 @@
+"""Pallas TPU Mamba-2 SSD kernel (chunked state-space duality).
+
+Grid = (B, n_chunks) with the chunk dim sequential; the inter-chunk state
+h (H, P, N) persists in VMEM scratch.  Each grid step does the intra-chunk
+quadratic duality on the MXU (Q×Q score and decay matrices) plus the state
+update — the TPU-native blocking of SSD: chunk Q sized so the (H, Q, Q) decay
+tensor and the (H, P, N) state both fit VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_scr, *,
+                chunk: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)      # (Q, H, P)
+    dt = dt_ref[0].astype(jnp.float32)    # (Q, H)
+    A = a_ref[...].astype(jnp.float32)    # (H,)
+    Bm = b_ref[0].astype(jnp.float32)     # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)     # (Q, N)
+
+    dA = dt * A[None, :]                  # (Q, H)
+    dA_cum = jnp.cumsum(dA, axis=0)       # (Q, H)
+    xdt = x * dt[..., None]               # (Q, H, P)
+
+    # intra-chunk: y[q] = sum_{k<=q} exp(dAcum[q]-dAcum[k]) * (C_q·B_k) xdt[k]
+    seg = dA_cum[:, None, :] - dA_cum[None, :, :]          # (Q, Q, H)
+    Q = seg.shape[0]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1))
+    L = jnp.where(tri[..., None], jnp.exp(seg), 0.0)       # (Q, Q, H)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q, Q)
+    w = L * scores[..., None]                              # (Q, Q, H)
+    y_intra = jnp.einsum("qkh,khp->qhp", w, xdt)
+
+    # inter-chunk: contribution of the carried state
+    h = h_scr[...]                                         # (H, P, N)
+    decay_in = jnp.exp(dA_cum)                             # (Q, H)
+    y_inter = jnp.einsum("qn,hpn->qhp", Cm, h) * decay_in[..., None]
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h' = exp(dAcum[-1]) h + sum_k exp(dAcum[-1]-dAcum[k]) B_k xdt[k]
+    decay_to_end = jnp.exp(dA_cum[-1][None, :] - dA_cum)   # (Q, H)
+    s_chunk = jnp.einsum("qn,qh,qhp->hpn", Bm, decay_to_end, xdt)
+    h_scr[...] = jnp.exp(dA_cum[-1])[:, None, None] * h + s_chunk
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit():
+        hout_ref[0] = h_scr[...]
+
+
+def ssd_scan_pallas(
+    x: jnp.ndarray,     # (B, S, H, P)
+    dt: jnp.ndarray,    # (B, S, H)
+    A: jnp.ndarray,     # (H,)
+    Bmat: jnp.ndarray,  # (B, S, N)
+    Cmat: jnp.ndarray,  # (B, S, N)
+    *,
+    chunk: int = 128,
+    h0: Optional[jnp.ndarray] = None,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if h0 is not None:
+        raise NotImplementedError("pallas ssd kernel starts from h=0; fold "
+                                  "carried state via ops.ssd_decode_step")
+    B, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    kernel = functools.partial(_ssd_kernel, chunk=Q, n_chunks=nc)
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, H, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, Q, H), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((H,), lambda b, c: (0,)),
+            pl.BlockSpec((1, Q, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, H, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, H, P, N), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bmat, Cmat)
+    return y, h_final

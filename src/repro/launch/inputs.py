@@ -1,0 +1,72 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape_name)`` returns the abstract args for the step
+function that the given shape cell lowers:
+
+  train_4k            → train_step(params, opt_state, batch)
+  prefill_32k         → prefill_step(params, batch)
+  decode_32k/long_500k→ decode_step(params, cache, token, pos)
+
+(only the batch/cache/token parts are returned here; params/opt-state structs
+come from jax.eval_shape over the initializers).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.registry import SHAPES, STEP_KIND
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, seq_len: int, global_batch: int
+                ) -> Dict[str, Any]:
+    B, S = global_batch, seq_len
+    if cfg.frontend == "audio_frames":
+        return {
+            "frames": SDS((B, S, cfg.d_model), jnp.bfloat16),
+            "labels": SDS((B, S), jnp.int32),
+        }
+    if cfg.frontend == "vision_patches":
+        s_text = S - cfg.n_patches
+        return {
+            "tokens": SDS((B, s_text), jnp.int32),
+            "patches": SDS((B, cfg.n_patches, cfg.d_model), jnp.bfloat16),
+            "labels": SDS((B, s_text), jnp.int32),
+        }
+    return {
+        "tokens": SDS((B, S), jnp.int32),
+        "labels": SDS((B, S), jnp.int32),
+    }
+
+
+def prompt_specs(cfg: ModelConfig, seq_len: int, global_batch: int
+                 ) -> Dict[str, Any]:
+    b = batch_specs(cfg, seq_len, global_batch)
+    b.pop("labels", None)
+    return b
+
+
+def cache_specs(cfg: ModelConfig, global_batch: int, max_len: int) -> Any:
+    return jax.eval_shape(lambda: lm.init_cache(cfg, global_batch, max_len))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Tuple[Any, ...]:
+    dims = SHAPES[shape_name]
+    S, B = dims["seq_len"], dims["global_batch"]
+    kind = STEP_KIND[shape_name]
+    if kind == "train":
+        return (batch_specs(cfg, S, B),)
+    if kind == "prefill":
+        return (prompt_specs(cfg, S, B),)
+    if kind == "decode":
+        cache = cache_specs(cfg, B, S)
+        token = SDS((B,), jnp.int32)
+        pos = SDS((B,), jnp.int32)
+        return (cache, token, pos)
+    raise ValueError(shape_name)

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — smoke tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+from repro.parallel.axes import (AxisRules, multi_pod_rules, pure_fsdp_rules,
+                                 single_pod_rules)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def rules_for(mesh: Mesh, layout: str = "tp") -> AxisRules:
+    """layout: "tp" (TP over model + FSDP over data, the baseline) or "fsdp"
+    (pure 256-way ZeRO-3, single-pod only — multi-pod falls back to tp since
+    global_batch 256 cannot split 512 ways)."""
+    if "pod" in mesh.axis_names:
+        return multi_pod_rules()
+    if layout == "fsdp":
+        return pure_fsdp_rules()
+    return single_pod_rules()
+
+
+def make_smoke_mesh(n_devices: int = 1) -> Mesh:
+    """Tiny mesh over however many real devices exist (tests)."""
+    devs = jax.devices()[:n_devices]
+    return Mesh(
+        __import__("numpy").array(devs).reshape(1, len(devs)),
+        ("data", "model"),
+        axis_types=(AxisType.Auto, AxisType.Auto),
+    )

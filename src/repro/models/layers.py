@@ -1,0 +1,321 @@
+"""Shared neural-net layers: norms, RoPE, GQA attention, MLP, embeddings.
+
+Functional style: ``init_*`` returns a param pytree, ``apply_*`` consumes it.
+Parameters never embed layer indices — model modules stack layer params with a
+leading layer axis and drive them through ``jax.lax.scan`` (small HLO, fast
+512-device SPMD compiles).
+
+Sharding is expressed through logical axes (repro.parallel.axes.shard); on a
+single CPU device every annotation is a no-op.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.parallel.axes import gather_weight, shard
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def remat_wrap(cfg: ModelConfig, fn):
+    """Unit-scan remat with the config's policy (EXPERIMENTS.md §Perf iter 3)."""
+    if cfg.remat_policy == "save_dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def dt(cfg: ModelConfig) -> jnp.dtype:
+    return jnp.dtype(cfg.param_dtype)
+
+
+def cdt(cfg: ModelConfig) -> jnp.dtype:
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _normal(key, shape, scale, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# =============================================================================
+# Norms
+# =============================================================================
+
+def init_norm(cfg: ModelConfig, dim: Optional[int] = None) -> Params:
+    d = dim if dim is not None else cfg.d_model
+    p = {"scale": jnp.ones((d,), dt(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dt(cfg))
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """qk-norm: RMS over head_dim, learned per-dim scale (qwen3)."""
+    xf = x.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# =============================================================================
+# RoPE
+# =============================================================================
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, Dh), positions: (B, S) or (S,). Rotates pairs (even, odd
+    halves convention)."""
+    B, S, H, Dh = x.shape
+    half = Dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# =============================================================================
+# Attention block (GQA + qk_norm + RoPE + full/sliding window)
+# =============================================================================
+
+def init_attention(cfg: ModelConfig, key) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    D = cfg.d_model
+    scale = 0.02
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    p = {
+        "wq": _normal(k1, (D, cfg.n_heads, cfg.head_dim), scale, dt(cfg)),
+        "wk": _normal(k2, (D, cfg.n_kv_heads, cfg.head_dim), scale, dt(cfg)),
+        "wv": _normal(k3, (D, cfg.n_kv_heads, cfg.head_dim), scale, dt(cfg)),
+        "wo": _normal(k4, (cfg.n_heads, cfg.head_dim, D), out_scale, dt(cfg)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), dt(cfg))
+        p["k_norm"] = jnp.ones((cfg.head_dim,), dt(cfg))
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                 positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    q = jnp.einsum("bsd,dhk->bshk", x, gather_weight(p["wq"]).astype(cdt(cfg)))
+    k = jnp.einsum("bsd,dhk->bshk", x, gather_weight(p["wk"]).astype(cdt(cfg)))
+    v = jnp.einsum("bsd,dhk->bshk", x, gather_weight(p["wv"]).astype(cdt(cfg)))
+    if cfg.qk_norm:
+        q = rms_head_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_head_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def apply_attention(
+    cfg: ModelConfig,
+    p: Params,
+    x: jnp.ndarray,              # (B, S, D)
+    positions: jnp.ndarray,      # (B, S) absolute positions
+    *,
+    window_override: Optional[int] = None,
+) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill body)."""
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    window = cfg.window if window_override is None else window_override
+    causal = cfg.causal
+    out = ops.flash_attention(q, k, v, causal=causal, window=window)
+    out = shard(out, "batch", None, "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, gather_weight(p["wo"]).astype(cdt(cfg)))
+    return shard(y, "batch", None, None)
+
+
+def attention_prefill_kv(
+    cfg: ModelConfig, p: Params, x: jnp.ndarray, positions: jnp.ndarray,
+    cache_size: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Compute post-RoPE K/V for cache population during prefill.
+
+    Returns (k, v) shaped (B, cache_size, Hkv, Dh): the last ``cache_size``
+    positions (ring semantics for windowed caches)."""
+    _, k, v = _project_qkv(cfg, p, x, positions)
+    S = k.shape[1]
+    if cache_size < S:
+        # keep the most recent cache_size entries, ring-rotated so that
+        # slot = pos % cache_size (matches decode-time insertion)
+        k = k[:, -cache_size:]
+        v = v[:, -cache_size:]
+        first_pos = positions[..., -cache_size:]
+        first = (first_pos[0, 0] if first_pos.ndim == 2 else first_pos[0])
+        rot = jnp.mod(first, cache_size)
+        k = jnp.roll(k, shift=rot, axis=1)
+        v = jnp.roll(v, shift=rot, axis=1)
+    elif cache_size > S:
+        padw = ((0, 0), (0, cache_size - S), (0, 0), (0, 0))
+        k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+    return k, v
+
+
+def apply_attention_decode(
+    cfg: ModelConfig,
+    p: Params,
+    x_t: jnp.ndarray,            # (B, 1, D) current token
+    pos: jnp.ndarray,            # (B,) absolute position of this token
+    k_cache: jnp.ndarray,        # (B, C, Hkv, Dh) (C = window or max len)
+    v_cache: jnp.ndarray,
+    *,
+    window_override: Optional[int] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step. Returns (y (B,1,D), new k_cache, new v_cache)."""
+    B, _, D = x_t.shape
+    C = k_cache.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x_t, p["wq"].astype(cdt(cfg)))
+    k = jnp.einsum("bsd,dhk->bshk", x_t, p["wk"].astype(cdt(cfg)))
+    v = jnp.einsum("bsd,dhk->bshk", x_t, p["wv"].astype(cdt(cfg)))
+    if cfg.qk_norm:
+        q = rms_head_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_head_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    # ring insert at pos % C (full caches: C == max len → plain append)
+    slot = jnp.mod(pos, C)  # (B,)
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, slot].set(k[:, 0])
+    v_cache = v_cache.at[bidx, slot].set(v[:, 0])
+    k_cache = shard(k_cache, "batch", "kv_seq", None, None)
+    v_cache = shard(v_cache, "batch", "kv_seq", None, None)
+    cache_len = jnp.minimum(pos + 1, C)
+    out = ops.decode_attention(q[:, 0], k_cache, v_cache, cache_len)
+    out = shard(out, "batch", "heads", None)
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(cdt(cfg)))[:, None]
+    return shard(y, "batch", None, None), k_cache, v_cache
+
+
+# =============================================================================
+# MLP (SwiGLU or GELU)
+# =============================================================================
+
+def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None) -> Params:
+    D = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    if cfg.act == "silu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": _normal(k1, (D, F), 0.02, dt(cfg)),
+            "w_up": _normal(k2, (D, F), 0.02, dt(cfg)),
+            "w_down": _normal(k3, (F, D), out_scale, dt(cfg)),
+        }
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w_up": _normal(k1, (D, F), 0.02, dt(cfg)),
+        "b_up": jnp.zeros((F,), dt(cfg)),
+        "w_down": _normal(k2, (F, D), out_scale, dt(cfg)),
+        "b_down": jnp.zeros((D,), dt(cfg)),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.act == "silu":
+        g = jnp.einsum("...d,df->...f", x, gather_weight(p["w_gate"]).astype(cdt(cfg)))
+        u = jnp.einsum("...d,df->...f", x, gather_weight(p["w_up"]).astype(cdt(cfg)))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(cdt(cfg)) * u
+        h = shard(h, "batch", None, "ffn")
+        y = jnp.einsum("...f,fd->...d", h, gather_weight(p["w_down"]).astype(cdt(cfg)))
+        return shard(y, "batch", None, None)
+    u = jnp.einsum("...d,df->...f", x, gather_weight(p["w_up"]).astype(cdt(cfg))) + p["b_up"]
+    h = jax.nn.gelu(u.astype(jnp.float32)).astype(cdt(cfg))
+    h = shard(h, "batch", None, "ffn")
+    y = jnp.einsum("...f,fd->...d", h, gather_weight(p["w_down"]).astype(cdt(cfg))) + p["b_down"]
+    return shard(y, "batch", None, None)
+
+
+# =============================================================================
+# Embedding / unembedding
+# =============================================================================
+
+def init_embedding(cfg: ModelConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"tok": _normal(k1, (cfg.vocab_size, cfg.d_model), 0.02, dt(cfg))}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _normal(k2, (cfg.vocab_size, cfg.d_model),
+                               1.0 / math.sqrt(cfg.d_model), dt(cfg))
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = gather_weight(p["tok"]).astype(cdt(cfg))[tokens]
+    return shard(x, "batch", None, None)
+
+
+def unembed_matrix(cfg: ModelConfig, p: Params) -> jnp.ndarray:
+    w = p["unembed"] if not cfg.tie_embeddings else p["tok"]
+    return w.astype(cdt(cfg))
+
+
+def logits_for(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Full logits — use only for single-position decode outputs."""
+    w = unembed_matrix(cfg, p)
+    out = jnp.einsum("...d,vd->...v", x, w)
+    return shard(out, "batch", "vocab") if out.ndim == 2 else shard(
+        out, "batch", None, "vocab")
+
+
+def chunked_softmax_xent(
+    cfg: ModelConfig,
+    p_embed: Params,
+    x: jnp.ndarray,        # (B, S, D) final hidden states
+    labels: jnp.ndarray,   # (B, S) int32; -100 = ignore
+    s_chunk: int = 2048,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cross-entropy without materializing (B, S, V) — logits are computed
+    per sequence chunk inside a scan (memory: B × s_chunk × V).
+
+    Returns (sum_loss, n_valid_tokens) as f32 scalars.
+    """
+    B, S, D = x.shape
+    w = unembed_matrix(cfg, p_embed)  # (V, D)
+    sc = min(s_chunk, S)
+    pad = (-S) % sc
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-100)
+    nc = x.shape[1] // sc
+    xs = x.reshape(B, nc, sc, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nc, sc).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        loss_sum, n_valid = carry
+        x_c, l_c = inp
+        logits = jnp.einsum("bsd,vd->bsv", x_c, w).astype(jnp.float32)
+        logits = shard(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        valid = l_c != -100
+        safe_labels = jnp.where(valid, l_c, 0)
+        picked = jnp.take_along_axis(logits, safe_labels[..., None], axis=-1)[..., 0]
+        tok_loss = jnp.where(valid, lse - picked, 0.0)
+        return (loss_sum + tok_loss.sum(), n_valid + valid.sum()), None
+
+    (loss_sum, n_valid), _ = jax.lax.scan(body, (jnp.float32(0), jnp.int32(0)),
+                                          (xs, ls))
+    return loss_sum, n_valid.astype(jnp.float32)

@@ -1,0 +1,127 @@
+"""Unified LM facade over the model families.
+
+One API for all 10 architectures:
+
+* ``init_params``                    — full parameter pytree
+* ``train_loss(cfg, params, batch)`` — scalar loss + metrics
+* ``init_cache`` / ``prefill`` / ``decode_step`` — serving path
+
+Batch layouts by family:
+  dense/moe/hybrid/ssm : {"tokens": (B,S) i32, "labels": (B,S) i32}
+  encoder (audio stub) : {"frames": (B,S,D) bf16, "labels": (B,S) i32}
+  vlm (patch stub)     : {"tokens": (B,S_text) i32, "patches": (B,P,D) bf16,
+                          "labels": (B,S_text) i32}
+The VLM fuses patches before text (early fusion); S_text = seq_len - n_patches
+so every assigned (arch × shape) cell keeps its exact total sequence length.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.axes import shard
+from . import mamba2, rglru, transformer
+from .config import ModelConfig
+from .layers import (
+    Params,
+    apply_norm,
+    chunked_softmax_xent,
+    embed_tokens,
+    init_embedding,
+    init_norm,
+    logits_for,
+)
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": transformer,
+    "encoder": transformer,
+    "vlm": transformer,
+    "hybrid": rglru,
+    "ssm": mamba2,
+}
+
+
+def backbone(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": init_embedding(cfg, k1),
+        "backbone": backbone(cfg).init_params(cfg, k2),
+        "final_norm": init_norm(cfg),
+    }
+
+
+def _embed_inputs(cfg: ModelConfig, params: Params, batch: Dict[str, Any]
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[jnp.ndarray]]:
+    """Returns (x (B,S,D), positions (S,) or (B,S), labels or None)."""
+    if cfg.frontend == "audio_frames":
+        x = batch["frames"].astype(jnp.dtype(cfg.compute_dtype))
+        labels = batch.get("labels")
+    elif cfg.frontend == "vision_patches":
+        tok = embed_tokens(cfg, params["embed"], batch["tokens"])
+        patches = batch["patches"].astype(tok.dtype)
+        x = jnp.concatenate([patches, tok], axis=1)  # early fusion
+        labels = batch.get("labels")
+        if labels is not None:
+            # patch positions carry no LM loss
+            pad = jnp.full(patches.shape[:2], -100, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+    else:
+        x = embed_tokens(cfg, params["embed"], batch["tokens"])
+        labels = batch.get("labels")
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :].repeat(
+        x.shape[0], axis=0)
+    x = shard(x, "batch", None, None)
+    return x, positions, labels
+
+
+def train_loss(cfg: ModelConfig, params: Params, batch: Dict[str, Any]
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    x, positions, labels = _embed_inputs(cfg, params, batch)
+    hidden, aux = backbone(cfg).forward_hidden(cfg, params["backbone"], x,
+                                               positions, remat=True)
+    hidden = apply_norm(cfg, params["final_norm"], hidden)
+    loss_sum, n_valid = chunked_softmax_xent(cfg, params["embed"], hidden,
+                                             labels)
+    n_valid = jnp.maximum(n_valid, 1.0)
+    xent = loss_sum / n_valid
+    loss = xent + aux
+    return loss, {"loss": loss, "xent": xent, "aux": aux, "tokens": n_valid}
+
+
+# =============================================================================
+# Serving
+# =============================================================================
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    return backbone(cfg).init_cache(cfg, batch, max_len)
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
+            max_len: int) -> Tuple[jnp.ndarray, Params]:
+    """Run the prompt; returns (last-position logits (B,V), populated cache)."""
+    x, positions, _ = _embed_inputs(cfg, params, batch)
+    cache = init_cache(cfg, x.shape[0], max_len)
+    hidden, cache = backbone(cfg).prefill_hidden(cfg, params["backbone"], x,
+                                                 positions, cache)
+    last = apply_norm(cfg, params["final_norm"], hidden[:, -1])
+    return logits_for(cfg, params["embed"], last), cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                token: jnp.ndarray, pos: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, Params]:
+    """One decode step. token: (B,) i32, pos: (B,) i32 absolute position.
+
+    Returns (logits (B,V), updated cache)."""
+    x_t = embed_tokens(cfg, params["embed"], token[:, None])
+    x_t, cache = backbone(cfg).decode_hidden(cfg, params["backbone"], cache,
+                                             x_t, pos)
+    h = apply_norm(cfg, params["final_norm"], x_t[:, 0])
+    return logits_for(cfg, params["embed"], h), cache

@@ -1,0 +1,209 @@
+"""Mamba-2 (SSD, state-space duality) — attention-free LM.
+
+Block: in_proj → [z gate | x | B | C | dt] → depthwise causal conv over
+(x,B,C) → SSD scan → gated RMSNorm → out_proj.  The SSD runs through
+kernels.ops.ssd_scan (chunked dual form) with a Pallas kernel on TPU.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.parallel.axes import gather_weight, shard
+from .config import ModelConfig
+from .layers import (Params, _normal, apply_norm, cdt, dt, init_norm,
+                     remat_wrap)
+
+N_GROUPS = 1  # single B/C group (mamba2-1.3b default)
+
+
+def init_block(cfg: ModelConfig, key) -> Params:
+    D = cfg.d_model
+    d_in = cfg.d_inner
+    H = cfg.n_ssm_heads
+    N = cfg.ssm_state
+    K = cfg.conv_width
+    conv_dim = d_in + 2 * N_GROUPS * N
+    k1, k2, k3 = jax.random.split(key, 3)
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    # dt bias init: softplus^-1 of dt in [1e-3, 1e-1] (mamba2 default)
+    u = jax.random.uniform(k3, (H,), jnp.float32)
+    dt0 = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))
+    return {
+        "in_proj": _normal(k1, (D, 2 * d_in + 2 * N_GROUPS * N + H), 0.02,
+                           dt(cfg)),
+        "conv_w": _normal(k2, (K, conv_dim), 0.02, dt(cfg)),
+        "conv_b": jnp.zeros((conv_dim,), dt(cfg)),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "dt_bias": dt_bias,
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "out_norm": jnp.ones((d_in,), dt(cfg)),
+        "out_proj": _normal(jax.random.fold_in(key, 7), (d_in, D), out_scale,
+                            dt(cfg)),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, cfg.n_layers)
+    blocks = [init_block(cfg, k) for k in keys]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    norms = [init_norm(cfg) for _ in range(cfg.n_layers)]
+    stacked_norms = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *norms)
+    return {"blocks": stacked, "norms": stacked_norms}
+
+
+def _split_proj(cfg: ModelConfig, z_x_bc_dt: jnp.ndarray):
+    d_in = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.n_ssm_heads
+    z = z_x_bc_dt[..., :d_in]
+    xbc = z_x_bc_dt[..., d_in: d_in + d_in + 2 * N_GROUPS * N]
+    dt_raw = z_x_bc_dt[..., -H:]
+    return z, xbc, dt_raw
+
+
+def _gated_out(cfg: ModelConfig, p: Params, y: jnp.ndarray, z: jnp.ndarray
+               ) -> jnp.ndarray:
+    """Gated RMSNorm + out projection. y, z: (..., d_inner)."""
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = (yf * yf).mean(-1, keepdims=True)
+    yn = yf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["out_norm"].astype(jnp.float32)
+    return jnp.einsum("...w,wd->...d", yn.astype(cdt(cfg)),
+                      gather_weight(p["out_proj"]).astype(cdt(cfg)))
+
+
+def _conv_full(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    return jax.nn.silu((y + b.astype(x.dtype)).astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_block(cfg: ModelConfig, p: Params, x: jnp.ndarray
+                ) -> jnp.ndarray:
+    """(B,S,D) -> (B,S,D), full sequence."""
+    B, S, D = x.shape
+    H, P, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    proj = jnp.einsum("bsd,de->bse", x, gather_weight(p["in_proj"]).astype(cdt(cfg)))
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc = _conv_full(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :cfg.d_inner]
+    Bmat = xbc[..., cfg.d_inner:cfg.d_inner + N]
+    Cmat = xbc[..., cfg.d_inner + N:]
+    dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))
+    xh = xs.reshape(B, S, H, P)
+    xh = shard(xh, "batch", None, "ssm_heads", None)
+    y, _ = ops.ssd_scan(xh, dt_v, -jnp.exp(p["a_log"]), Bmat, Cmat,
+                        chunk=cfg.ssm_chunk)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, cfg.d_inner).astype(cdt(cfg))
+    out = _gated_out(cfg, p, y, z)
+    return shard(out, "batch", None, None)
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, x: jnp.ndarray,
+                   positions: jnp.ndarray, *, remat: bool = True
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def body(x, inp):
+        p_block, p_norm = inp
+        x = x + apply_block(cfg, p_block, apply_norm(cfg, p_norm, x))
+        return shard(x, "batch", None, None), None
+
+    body = remat_wrap(cfg, body) if remat else body
+    x, _ = jax.lax.scan(body, x, (params["blocks"], params["norms"]))
+    return x, jnp.float32(0)
+
+
+# =============================================================================
+# Inference: recurrent state (no KV cache)
+# =============================================================================
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    H, P, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * N_GROUPS * N
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1, conv_dim),
+                          jnp.float32),
+    }
+
+
+def _block_prefill(cfg: ModelConfig, p: Params, x: jnp.ndarray):
+    """Forward + final state for one block."""
+    B, S, D = x.shape
+    H, P, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    proj = jnp.einsum("bsd,de->bse", x, gather_weight(p["in_proj"]).astype(cdt(cfg)))
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    conv_tail = xbc[:, -(cfg.conv_width - 1):].astype(jnp.float32)
+    xbc = _conv_full(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :cfg.d_inner]
+    Bmat = xbc[..., cfg.d_inner:cfg.d_inner + N]
+    Cmat = xbc[..., cfg.d_inner + N:]
+    dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))
+    xh = xs.reshape(B, S, H, P)
+    y, h_final = ops.ssd_scan(xh, dt_v, -jnp.exp(p["a_log"]), Bmat, Cmat,
+                              chunk=cfg.ssm_chunk)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, cfg.d_inner).astype(cdt(cfg))
+    out = _gated_out(cfg, p, y, z)
+    return out, h_final, conv_tail
+
+
+def prefill_hidden(cfg: ModelConfig, params: Params, x: jnp.ndarray,
+                   positions: jnp.ndarray, cache: Params
+                   ) -> Tuple[jnp.ndarray, Params]:
+    def body(x, inp):
+        p_block, p_norm = inp
+        out, h_final, conv_tail = _block_prefill(
+            cfg, p_block, apply_norm(cfg, p_norm, x))
+        return x + out, (h_final, conv_tail)
+
+    x, (ssm, conv) = jax.lax.scan(body, x, (params["blocks"], params["norms"]))
+    return x, {"ssm": ssm, "conv": conv}
+
+
+def decode_hidden(cfg: ModelConfig, params: Params, cache: Params,
+                  x_t: jnp.ndarray, pos: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, Params]:
+    H, P, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    def body(x, inp):
+        p_block, p_norm, h, conv_tail = inp
+        B = x.shape[0]
+        h_in = apply_norm(cfg, p_norm, x)
+        proj = jnp.einsum("bsd,de->bse", h_in, p_block["in_proj"].astype(cdt(cfg)))
+        z, xbc, dt_raw = _split_proj(cfg, proj)
+        # conv with carried tail
+        K = cfg.conv_width
+        xp = jnp.concatenate([conv_tail.astype(xbc.dtype), xbc], axis=1)
+        yc = sum(xp[:, i:i + 1] * p_block["conv_w"][i].astype(xbc.dtype)
+                 for i in range(K))
+        yc = jax.nn.silu((yc + p_block["conv_b"].astype(xbc.dtype))
+                         .astype(jnp.float32)).astype(xbc.dtype)
+        new_tail = jnp.concatenate([conv_tail[:, 1:], xbc.astype(jnp.float32)],
+                                   axis=1)
+        xs = yc[..., :cfg.d_inner]
+        Bmat = yc[..., cfg.d_inner:cfg.d_inner + N]
+        Cmat = yc[..., cfg.d_inner + N:]
+        dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                               + p_block["dt_bias"].astype(jnp.float32))
+        xh = xs.reshape(B, H, P)
+        y, h_new = ops.ssd_decode_step(xh, dt_v[:, 0], -jnp.exp(p_block["a_log"]),
+                                       Bmat[:, 0], Cmat[:, 0], h)
+        y = y + p_block["d_skip"].astype(jnp.float32)[None, :, None] \
+            * xh.astype(jnp.float32)
+        y = y.reshape(B, 1, cfg.d_inner).astype(cdt(cfg))
+        out = _gated_out(cfg, p_block, y, z)
+        return x + out, (h_new, new_tail)
+
+    x, (ssm, conv) = jax.lax.scan(
+        body, x_t, (params["blocks"], params["norms"], cache["ssm"],
+                    cache["conv"]))
+    return x, {"ssm": ssm, "conv": conv}

@@ -1,0 +1,331 @@
+"""RecurrentGemma / Griffin: RG-LRU recurrent blocks + local attention, 1:2.
+
+Block pattern (rglru, rglru, attn) repeats; every temporal-mixing block is
+followed by a SwiGLU MLP.  The RG-LRU recurrence runs through
+kernels.ops.rglru_scan (associative scan on CPU/dry-run, Pallas kernel on TPU).
+
+Layers that don't fit a whole pattern repeat (38 = 12×3 + 2) are appended as
+individually-applied trailing blocks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.parallel.axes import shard
+from .config import ModelConfig
+from .layers import (
+    Params,
+    _normal,
+    remat_wrap,
+    apply_attention,
+    apply_attention_decode,
+    apply_mlp,
+    apply_norm,
+    attention_prefill_kv,
+    cdt,
+    dt,
+    init_attention,
+    init_mlp,
+    init_norm,
+)
+
+N_DIAG_BLOCKS = 8  # RG-LRU gate matrices are block-diagonal (Griffin §2.4)
+C_RGLRU = 8.0      # decay sharpness constant
+
+
+# =============================================================================
+# RG-LRU temporal-mixing block
+# =============================================================================
+
+def init_rglru_block(cfg: ModelConfig, key) -> Params:
+    W = cfg.lru_width
+    D = cfg.d_model
+    kb = W // N_DIAG_BLOCKS
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    # Λ init so that a = exp(-c softplus(Λ) σ(...)) starts near 0.9..0.999
+    lam = jnp.log(jnp.expm1(-jnp.log(
+        jnp.linspace(0.9, 0.999, W, dtype=jnp.float32)) / C_RGLRU))
+    return {
+        "w_x": _normal(k1, (D, W), 0.02, dt(cfg)),       # input branch
+        "w_gate": _normal(k2, (D, W), 0.02, dt(cfg)),    # gelu gate branch
+        "conv_w": _normal(k3, (cfg.conv_width, W), 0.02, dt(cfg)),
+        "conv_b": jnp.zeros((W,), dt(cfg)),
+        "w_a": _normal(k4, (N_DIAG_BLOCKS, kb, kb), 0.02, dt(cfg)),  # recurrence gate
+        "b_a": jnp.zeros((W,), dt(cfg)),
+        "w_i": _normal(k5, (N_DIAG_BLOCKS, kb, kb), 0.02, dt(cfg)),  # input gate
+        "b_i": jnp.zeros((W,), dt(cfg)),
+        "lam": lam,                                       # (W,) f32
+        "w_out": _normal(k6, (W, D), out_scale, dt(cfg)),
+    }
+
+
+def _block_diag_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., W), w: (nb, kb, kb) block-diagonal — (..., W) out."""
+    nb, kb, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], nb, kb)
+    y = jnp.einsum("...nk,nkj->...nj", xs, w)
+    return y.reshape(*x.shape)
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 tail: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv over seq. x: (B,S,W), w: (K,W).
+
+    ``tail``: (B, K-1, W) carried context from previous tokens (decode)."""
+    K = w.shape[0]
+    if tail is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    return y + b.astype(x.dtype)
+
+
+def _rglru_gates(cfg: ModelConfig, p: Params, xc: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (a_log (B,S,W) <= 0, gated input (B,S,W))."""
+    r = jax.nn.sigmoid(_block_diag_matmul(xc, p["w_a"]).astype(jnp.float32)
+                       + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag_matmul(xc, p["w_i"]).astype(jnp.float32)
+                       + p["b_i"].astype(jnp.float32))
+    a_log = -C_RGLRU * jax.nn.softplus(p["lam"]) * r  # (B,S,W), <= 0
+    return a_log, (i * xc.astype(jnp.float32))
+
+
+def apply_rglru_block(cfg: ModelConfig, p: Params, x: jnp.ndarray
+                      ) -> jnp.ndarray:
+    """Full-sequence RG-LRU mixing. x: (B,S,D) -> (B,S,D)."""
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, p["w_gate"].astype(cdt(cfg)))
+        .astype(jnp.float32))
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(cdt(cfg)))
+    xb = shard(xb, "batch", None, "ffn")
+    xc = _causal_conv(xb, p["conv_w"], p["conv_b"])
+    a_log, gated = _rglru_gates(cfg, p, xc)
+    h, _ = ops.rglru_scan(gated.astype(cdt(cfg)), a_log)
+    y = h.astype(jnp.float32) * gate
+    out = jnp.einsum("bsw,wd->bsd", y.astype(cdt(cfg)),
+                     p["w_out"].astype(cdt(cfg)))
+    return shard(out, "batch", None, None)
+
+
+def rglru_block_decode(cfg: ModelConfig, p: Params, x_t: jnp.ndarray,
+                       state: Dict[str, jnp.ndarray]
+                       ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token RG-LRU step. x_t: (B,1,D); state: {h (B,W) f32, conv (B,K-1,W)}."""
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x_t, p["w_gate"].astype(cdt(cfg)))
+        .astype(jnp.float32))
+    xb = jnp.einsum("bsd,dw->bsw", x_t, p["w_x"].astype(cdt(cfg)))
+    xc = _causal_conv(xb, p["conv_w"], p["conv_b"], tail=state["conv"])
+    new_conv = jnp.concatenate([state["conv"][:, 1:], xb.astype(jnp.float32)],
+                               axis=1)
+    a_log, gated = _rglru_gates(cfg, p, xc)
+    h = ops.rglru_decode_step(gated[:, 0], a_log[:, 0], state["h"])
+    y = h[:, None].astype(jnp.float32) * gate
+    out = jnp.einsum("bsw,wd->bsd", y.astype(cdt(cfg)),
+                     p["w_out"].astype(cdt(cfg)))
+    return out, {"h": h, "conv": new_conv}
+
+
+# =============================================================================
+# Hybrid stack
+# =============================================================================
+
+def _pattern(cfg: ModelConfig) -> Tuple[str, ...]:
+    return cfg.block_pattern
+
+
+def _n_units(cfg: ModelConfig) -> int:
+    return cfg.n_layers // len(_pattern(cfg))
+
+
+def _n_tail(cfg: ModelConfig) -> int:
+    return cfg.n_layers % len(_pattern(cfg))
+
+
+def init_layer(cfg: ModelConfig, key, kind: str) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"mix_norm": init_norm(cfg), "mlp_norm": init_norm(cfg),
+         "mlp": init_mlp(cfg, k2)}
+    if kind == "attn":
+        p["attn"] = init_attention(cfg, k1)
+    else:
+        p["rglru"] = init_rglru_block(cfg, k1)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    pat = _pattern(cfg)
+    n_units, n_tail = _n_units(cfg), _n_tail(cfg)
+    keys = jax.random.split(key, cfg.n_layers)
+    unit_params: List[Params] = []
+    for pos, kind in enumerate(pat):
+        per_unit = [init_layer(cfg, keys[i * len(pat) + pos], kind)
+                    for i in range(n_units)]
+        unit_params.append(jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *per_unit))
+    tail = [init_layer(cfg, keys[n_units * len(pat) + t], pat[t % len(pat)])
+            for t in range(n_tail)]
+    return {"units": unit_params, "tail": tail}
+
+
+def _apply_layer(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                 positions: jnp.ndarray, kind: str) -> jnp.ndarray:
+    h_in = apply_norm(cfg, p["mix_norm"], x)
+    if kind == "attn":
+        h = apply_attention(cfg, p["attn"], h_in, positions,
+                            window_override=cfg.window)
+    else:
+        h = apply_rglru_block(cfg, p["rglru"], h_in)
+    x = x + h
+    x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["mlp_norm"], x))
+    return x
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, x: jnp.ndarray,
+                   positions: jnp.ndarray, *, remat: bool = True
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    pat = _pattern(cfg)
+
+    def unit_body(x, unit_p):
+        for pos, kind in enumerate(pat):
+            x = _apply_layer(cfg, unit_p[pos], x, positions, kind)
+        return shard(x, "batch", None, None), None
+
+    body = remat_wrap(cfg, unit_body) if remat else unit_body
+    x, _ = jax.lax.scan(body, x, tuple(params["units"]))
+    for t, p in enumerate(params["tail"]):
+        x = _apply_layer(cfg, p, x, positions, pat[t % len(pat)])
+    return x, jnp.float32(0)
+
+
+# =============================================================================
+# Inference state: attention ring caches + recurrent states
+# =============================================================================
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    pat = _pattern(cfg)
+    n_units, n_tail = _n_units(cfg), _n_tail(cfg)
+    C = min(max_len, cfg.window) if cfg.window else max_len
+    W = cfg.lru_width
+    K = cfg.conv_width
+    cache: Dict[str, Any] = {"units": [], "tail": []}
+    for pos, kind in enumerate(pat):
+        if kind == "attn":
+            z = jnp.zeros((n_units, batch, C, cfg.n_kv_heads, cfg.head_dim),
+                          jnp.dtype(cfg.param_dtype))
+            cache["units"].append({"k": z, "v": z})
+        else:
+            cache["units"].append({
+                "h": jnp.zeros((n_units, batch, W), jnp.float32),
+                "conv": jnp.zeros((n_units, batch, K - 1, W), jnp.float32),
+            })
+    for t in range(n_tail):
+        kind = pat[t % len(pat)]
+        if kind == "attn":
+            z = jnp.zeros((batch, C, cfg.n_kv_heads, cfg.head_dim),
+                          jnp.dtype(cfg.param_dtype))
+            cache["tail"].append({"k": z, "v": z})
+        else:
+            cache["tail"].append({
+                "h": jnp.zeros((batch, W), jnp.float32),
+                "conv": jnp.zeros((batch, K - 1, W), jnp.float32),
+            })
+    return cache
+
+
+def prefill_hidden(cfg: ModelConfig, params: Params, x: jnp.ndarray,
+                   positions: jnp.ndarray, cache: Params
+                   ) -> Tuple[jnp.ndarray, Params]:
+    """Sequential (layer-scanned) prefill that also fills caches/states."""
+    pat = _pattern(cfg)
+    C = None
+    for c in cache["units"]:
+        if "k" in c:
+            C = c["k"].shape[2]
+
+    def prefill_layer(x, p, kind):
+        """One layer forward that also emits its cache/state (single pass)."""
+        h_in = apply_norm(cfg, p["mix_norm"], x)
+        if kind == "attn":
+            k, v = attention_prefill_kv(cfg, p["attn"], h_in, positions, C)
+            h = apply_attention(cfg, p["attn"], h_in, positions,
+                                window_override=cfg.window)
+            new_c = {"k": k, "v": v}
+        else:
+            rp = p["rglru"]
+            gate = jax.nn.gelu(jnp.einsum(
+                "bsd,dw->bsw", h_in, rp["w_gate"].astype(cdt(cfg))
+            ).astype(jnp.float32))
+            xb = jnp.einsum("bsd,dw->bsw", h_in, rp["w_x"].astype(cdt(cfg)))
+            xc = _causal_conv(xb, rp["conv_w"], rp["conv_b"])
+            a_log, gated = _rglru_gates(cfg, rp, xc)
+            hs, h_last = ops.rglru_scan(gated.astype(cdt(cfg)), a_log)
+            y = hs.astype(jnp.float32) * gate
+            h = jnp.einsum("bsw,wd->bsd", y.astype(cdt(cfg)),
+                           rp["w_out"].astype(cdt(cfg)))
+            new_c = {
+                "h": h_last.astype(jnp.float32),
+                "conv": xb[:, -(cfg.conv_width - 1):].astype(jnp.float32),
+            }
+        x = x + h
+        x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["mlp_norm"], x))
+        return x, new_c
+
+    def unit_body(x, unit_p):
+        new_c = []
+        for pos, kind in enumerate(pat):
+            x, nc = prefill_layer(x, unit_p[pos], kind)
+            new_c.append(nc)
+        return x, tuple(new_c)
+
+    x, caches = jax.lax.scan(unit_body, x, tuple(params["units"]))
+    new_cache = {"units": list(caches), "tail": []}
+    for t, p in enumerate(params["tail"]):
+        kind = pat[t % len(pat)]
+        x, nc = prefill_layer(x, p, kind)
+        new_cache["tail"].append(nc)
+    return x, new_cache
+
+
+def decode_hidden(cfg: ModelConfig, params: Params, cache: Params,
+                  x_t: jnp.ndarray, pos: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, Params]:
+    pat = _pattern(cfg)
+
+    def step_layer(x, p, c, kind):
+        h_in = apply_norm(cfg, p["mix_norm"], x)
+        if kind == "attn":
+            h, kc, vc = apply_attention_decode(
+                cfg, p["attn"], h_in, pos, c["k"], c["v"],
+                window_override=cfg.window)
+            new_c = {"k": kc, "v": vc}
+        else:
+            h, new_c = rglru_block_decode(cfg, p["rglru"], h_in, c)
+        x = x + h
+        x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["mlp_norm"], x))
+        return x, new_c
+
+    def unit_body(x, inp):
+        unit_p, unit_c = inp
+        new_cs = []
+        for i, kind in enumerate(pat):
+            x, nc = step_layer(x, unit_p[i], unit_c[i], kind)
+            new_cs.append(nc)
+        return x, tuple(new_cs)
+
+    x, caches = jax.lax.scan(
+        unit_body, x_t, (tuple(params["units"]), tuple(cache["units"])))
+    new_cache = {"units": list(caches), "tail": []}
+    for t, p in enumerate(params["tail"]):
+        kind = pat[t % len(pat)]
+        x, nc = step_layer(x, p, cache["tail"][t], kind)
+        new_cache["tail"].append(nc)
+    return x, new_cache

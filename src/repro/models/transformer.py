@@ -1,0 +1,183 @@
+"""Decoder/encoder transformer stack with optional interleaved MoE FFNs.
+
+Covers: qwen3-1.7b, granite-8b, phi4-mini-3.8b, llama3.2-3b (dense causal),
+hubert-xlarge (encoder, bidirectional), internvl2-26b backbone (dense causal),
+mixtral-8x7b (MoE every layer, SWA), llama4-maverick (MoE every other layer +
+shared expert).
+
+Layers are stacked into scan *units* of ``moe_every`` consecutive layers so a
+single compiled unit body serves the whole depth (small HLO, fast SPMD
+partitioning on 512 devices).  Each unit body is rematerialized
+(jax.checkpoint) for training memory.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.axes import shard
+from .config import ModelConfig
+from .layers import (
+    Params,
+    remat_wrap,
+    apply_attention,
+    apply_attention_decode,
+    apply_mlp,
+    apply_norm,
+    attention_prefill_kv,
+    init_attention,
+    init_mlp,
+    init_norm,
+)
+from .moe import apply_moe, init_moe_layer
+
+
+def _unit_size(cfg: ModelConfig) -> int:
+    return cfg.moe_every if cfg.n_experts > 0 else 1
+
+
+def _n_units(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % _unit_size(cfg) == 0
+    return cfg.n_layers // _unit_size(cfg)
+
+
+def _layer_is_moe(cfg: ModelConfig, pos_in_unit: int) -> bool:
+    # MoE occupies the last layer of each unit (llama4: dense, moe, dense, ...)
+    return cfg.n_experts > 0 and pos_in_unit == _unit_size(cfg) - 1
+
+
+def init_layer(cfg: ModelConfig, key, is_moe: bool) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "attn_norm": init_norm(cfg),
+        "attn": init_attention(cfg, k1),
+        "mlp_norm": init_norm(cfg),
+    }
+    if is_moe:
+        p["moe"] = init_moe_layer(cfg, k2)
+    else:
+        p["mlp"] = init_mlp(cfg, k3)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    """Stacked params: every leaf gets a leading (n_units,) axis."""
+    u = _unit_size(cfg)
+    n_units = _n_units(cfg)
+    keys = jax.random.split(key, n_units * u).reshape(n_units, u, 2)
+
+    unit_params: List[Params] = []
+    for pos in range(u):
+        is_moe = _layer_is_moe(cfg, pos)
+        per_unit = [init_layer(cfg, keys[i, pos], is_moe) for i in range(n_units)]
+        unit_params.append(jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *per_unit))
+    return {"units": unit_params}
+
+
+def _apply_layer(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                 positions: jnp.ndarray, is_moe: bool) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = apply_attention(cfg, p["attn"], apply_norm(cfg, p["attn_norm"], x),
+                        positions)
+    x = x + h
+    ffn_in = apply_norm(cfg, p["mlp_norm"], x)
+    if is_moe:
+        y, aux = apply_moe(cfg, p["moe"], ffn_in)
+    else:
+        y, aux = apply_mlp(cfg, p["mlp"], ffn_in), jnp.float32(0)
+    return x + y, aux
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, x: jnp.ndarray,
+                   positions: jnp.ndarray, *, remat: bool = True
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run all layers. Returns (hidden (B,S,D), aux loss)."""
+    u = _unit_size(cfg)
+
+    def unit_body(carry, unit_p):
+        x, aux = carry
+        for pos in range(u):
+            x, a = _apply_layer(cfg, unit_p[pos], x, positions,
+                                _layer_is_moe(cfg, pos))
+            aux = aux + a
+        x = shard(x, "batch", None, None)
+        return (x, aux), None
+
+    body = remat_wrap(cfg, unit_body) if remat else unit_body
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0)),
+                               tuple(params["units"]))
+    return x, aux
+
+
+# =============================================================================
+# Inference: prefill + decode with per-layer KV caches
+# =============================================================================
+
+def cache_size_for(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.attention_kind in ("sliding", "local") and cfg.window > 0:
+        return min(max_len, cfg.window)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    """KV caches stacked (n_units, unit, B, C, Hkv, Dh)."""
+    C = cache_size_for(cfg, max_len)
+    shape = (_n_units(cfg), _unit_size(cfg), batch, C, cfg.n_kv_heads,
+             cfg.head_dim)
+    z = jnp.zeros(shape, jnp.dtype(cfg.param_dtype))
+    return {"k": z, "v": z}
+
+
+def prefill_hidden(cfg: ModelConfig, params: Params, x: jnp.ndarray,
+                   positions: jnp.ndarray, cache: Params
+                   ) -> Tuple[jnp.ndarray, Params]:
+    """Forward + populate caches. Returns (hidden, cache)."""
+    u = _unit_size(cfg)
+    C = cache["k"].shape[3]
+
+    def unit_body(x, unit_p):
+        ks, vs = [], []
+        for pos in range(u):
+            p = unit_p[pos]
+            h_in = apply_norm(cfg, p["attn_norm"], x)
+            k, v = attention_prefill_kv(cfg, p["attn"], h_in, positions, C)
+            ks.append(k)
+            vs.append(v)
+            x, _ = _apply_layer(cfg, p, x, positions, _layer_is_moe(cfg, pos))
+        x = shard(x, "batch", None, None)
+        return x, (jnp.stack(ks), jnp.stack(vs))
+
+    x, (k_all, v_all) = jax.lax.scan(unit_body, x, tuple(params["units"]))
+    return x, {"k": k_all, "v": v_all}
+
+
+def decode_hidden(cfg: ModelConfig, params: Params, cache: Params,
+                  x_t: jnp.ndarray, pos: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, Params]:
+    """One token through all layers. x_t: (B,1,D), pos: (B,)."""
+    u = _unit_size(cfg)
+
+    def unit_body(x, inp):
+        unit_p, kc_u, vc_u = inp
+        new_k, new_v = [], []
+        for p_in_u in range(u):
+            p = unit_p[p_in_u]
+            h_in = apply_norm(cfg, p["attn_norm"], x)
+            h, kc, vc = apply_attention_decode(
+                cfg, p["attn"], h_in, pos, kc_u[p_in_u], vc_u[p_in_u])
+            new_k.append(kc)
+            new_v.append(vc)
+            x = x + h
+            ffn_in = apply_norm(cfg, p["mlp_norm"], x)
+            if _layer_is_moe(cfg, p_in_u):
+                y, _ = apply_moe(cfg, p["moe"], ffn_in)
+            else:
+                y = apply_mlp(cfg, p["mlp"], ffn_in)
+            x = x + y
+        return x, (jnp.stack(new_k), jnp.stack(new_v))
+
+    x, (k_all, v_all) = jax.lax.scan(
+        unit_body, x_t, (tuple(params["units"]), cache["k"], cache["v"]))
+    return x, {"k": k_all, "v": v_all}

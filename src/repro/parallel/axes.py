@@ -1,0 +1,172 @@
+"""Logical-axis sharding: model code names axes, the launcher binds them.
+
+Model code annotates activations/parameters with *logical* axis names
+("batch", "heads", "ffn", "vocab", "fsdp", "experts", "kv_seq", ...).  The
+launcher installs an :class:`AxisRules` mapping logical names to mesh axes
+(single-pod, multi-pod, or none for single-device smoke tests).  When no rules
+or no mesh are active, every annotation is a no-op, so the same model code
+runs on one CPU device and on a 512-chip mesh.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    """logical axis name -> mesh axis (or tuple of mesh axes, or None)."""
+
+    rules: Dict[str, MeshAxes] = field(default_factory=dict)
+    # pure-FSDP layouts: force an explicit all-gather of weights at use-time
+    # so GSPMD never "optimizes" into per-layer activation all-reduces
+    # (EXPERIMENTS.md §Perf iter 4 — 5x collective reduction on cell A)
+    gather_weights_at_use: bool = False
+
+    def resolve(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        return self.rules.get(logical)
+
+    def spec(self, *logical_axes: Optional[str]) -> P:
+        return P(*[self.resolve(a) for a in logical_axes])
+
+
+# -- thread-local active rules -------------------------------------------------
+class _State(threading.local):
+    def __init__(self) -> None:
+        self.rules: Optional[AxisRules] = None
+        self.mesh: Optional[Mesh] = None
+
+
+_STATE = _State()
+
+
+@contextmanager
+def axis_rules(rules: AxisRules, mesh: Optional[Mesh] = None) -> Iterator[None]:
+    prev_r, prev_m = _STATE.rules, _STATE.mesh
+    _STATE.rules, _STATE.mesh = rules, mesh
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _STATE.rules, _STATE.mesh = prev_r, prev_m
+
+
+def current_rules() -> Optional[AxisRules]:
+    return _STATE.rules
+
+
+def current_mesh() -> Optional[Mesh]:
+    if _STATE.mesh is not None:
+        return _STATE.mesh
+    # fall back to jax's ambient mesh if one is entered directly
+    env = getattr(jax.sharding, "get_abstract_mesh", None)
+    return None
+
+
+def logical_spec(*logical_axes: Optional[str]) -> P:
+    """Resolve logical axes to a PartitionSpec under the active rules."""
+    rules = current_rules()
+    if rules is None:
+        return P()
+    return rules.spec(*logical_axes)
+
+
+def shard(x: Any, *logical_axes: Optional[str]) -> Any:
+    """with_sharding_constraint by logical axes; no-op without rules/mesh."""
+    rules = current_rules()
+    if rules is None or _STATE.mesh is None:
+        return x
+    spec = rules.spec(*logical_axes)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_STATE.mesh, spec))
+
+
+def gather_weight(w: Any) -> Any:
+    """Force a weight to be all-gathered (replicated) at its use site.
+
+    No-op unless the active rules opt in (pure-FSDP layouts).  This pins
+    GSPMD to the ZeRO-3 schedule: gather small weights once per layer rather
+    than all-reducing large partial activations."""
+    rules = current_rules()
+    if (rules is None or _STATE.mesh is None
+            or not rules.gather_weights_at_use):
+        return w
+    return jax.lax.with_sharding_constraint(
+        w, NamedSharding(_STATE.mesh, P(*([None] * w.ndim))))
+
+
+def named_sharding(*logical_axes: Optional[str]) -> Optional[NamedSharding]:
+    rules = current_rules()
+    if rules is None or _STATE.mesh is None:
+        return None
+    return NamedSharding(_STATE.mesh, rules.spec(*logical_axes))
+
+
+# -- standard rule sets -----------------------------------------------------------
+
+def single_pod_rules() -> AxisRules:
+    """(data=16, model=16) mesh."""
+    return AxisRules(rules={
+        "batch": ("data",),      # DP/FSDP batch dim
+        "fsdp": ("data",),       # parameter storage sharding (ZeRO-3 style)
+        "heads": "model",        # TP attention heads
+        "kv_heads": None,        # GQA KV heads: replicated under TP
+        "ffn": "model",          # TP MLP hidden
+        "vocab": "model",        # TP vocab/logits
+        "embed": None,           # d_model stays unsharded in activations
+        "experts": "model",      # EP expert dim
+        "seq": None,             # sequence dim of activations (train/prefill)
+        "kv_seq": "model",       # decode KV-cache sequence dim (flash-decoding)
+        "seq_shard": "model",    # context-parallel sequence dim (long ctx / EDP)
+        "ssm_heads": "model",    # SSM / RG-LRU state heads
+    })
+
+
+def multi_pod_rules() -> AxisRules:
+    """(pod=2, data=16, model=16) mesh — pod extends the DP axis; FSDP stays
+    intra-pod so param all-gathers never cross the (slow) pod interconnect."""
+    r = single_pod_rules().rules.copy()
+    r["batch"] = ("pod", "data")
+    return AxisRules(rules=r)
+
+
+def pure_fsdp_rules() -> AxisRules:
+    """Single-pod (data=16, model=16) with NO tensor parallelism: both mesh
+    axes act as one 256-way DP/FSDP domain.
+
+    For small models (≲2B params) per-layer TP activation psums dwarf the
+    compute (hillclimb cells A/B); pure ZeRO-3 replaces them with per-layer
+    param all-gathers that are ~100× smaller at these sizes.  Requires
+    global_batch % 256 == 0.
+    """
+    return AxisRules(rules={
+        "batch": ("data", "model"),
+        "fsdp": ("data", "model"),
+        "heads": None,
+        "kv_heads": None,
+        "ffn": None,
+        "vocab": None,
+        "embed": None,
+        "experts": None,
+        "seq": None,
+        "kv_seq": None,
+        "seq_shard": None,
+        "ssm_heads": None,
+    }, gather_weights_at_use=True)
+
+
+def no_rules() -> AxisRules:
+    return AxisRules(rules={})

@@ -1,0 +1,170 @@
+"""Post-SPMD HLO analysis: collective inventory + roofline terms.
+
+``cost_analysis()`` gives per-device FLOPs and bytes, but nothing about
+collectives — those are parsed from the compiled HLO text: every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op's operand
+shapes are summed into per-chip wire-byte estimates using standard ring-
+algorithm factors.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# TPU v5e hardware constants (roofline targets)
+PEAK_FLOPS_BF16 = 197e12     # per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~4 links/chip on a 2D torus)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)"
+                       r"\[([\d,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUP_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    op_bytes: Dict[str, int] = field(default_factory=dict)    # Σ operand bytes
+    wire_bytes: Dict[str, float] = field(default_factory=dict)  # ring model / chip
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    @property
+    def total_op_bytes(self) -> int:
+        return sum(self.op_bytes.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Scan a compiled (post-SPMD) HLO module for collective ops."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # instruction lines look like: "%name = TYPE[SHAPE] op-name(...), attrs"
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+)$", stripped)
+        if not m:
+            continue
+        rest = m.group(1)
+        kind = None
+        for c in _COLLECTIVES:
+            # match op name at the call position, e.g. " all-gather(" or
+            # "all-reduce-start("
+            if re.search(rf"\b{c}(-start)?\(", rest):
+                kind = c
+                break
+        if kind is None:
+            continue
+        # operand shapes: everything inside the call parens
+        call = rest[rest.index("("):]
+        shapes = _SHAPE_RE.findall(call)
+        if not shapes:
+            # fall back to the result shape (before the op name)
+            shapes = _SHAPE_RE.findall(rest)
+        nbytes = sum(_shape_bytes(d, s) for d, s in shapes)
+        # group size for ring factors
+        gm = _GROUP_RE.search(rest)
+        if gm:
+            gsize = len(gm.group(1).split(","))
+        else:
+            gi = _GROUP_IOTA_RE.search(rest)
+            gsize = int(gi.group(2)) if gi else 2
+        gsize = max(2, gsize)
+        ring = (gsize - 1) / gsize
+        if kind == "all-reduce":
+            wire = 2.0 * ring * nbytes
+        elif kind == "collective-permute":
+            wire = float(nbytes)
+        else:  # all-gather / reduce-scatter / all-to-all
+            wire = ring * nbytes
+        stats.counts[kind] = stats.counts.get(kind, 0) + 1
+        stats.op_bytes[kind] = stats.op_bytes.get(kind, 0) + nbytes
+        stats.wire_bytes[kind] = stats.wire_bytes.get(kind, 0.0) + wire
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    wire_bytes_per_device: float
+    n_devices: int
+    model_flops_total: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total_hlo = self.flops_per_device * self.n_devices
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def mfu_upper_bound(self) -> float:
+        """Model-flops utilization if the step ran exactly at the roofline."""
+        t = self.step_time_lower_bound
+        if t <= 0:
+            return 0.0
+        return (self.model_flops_total
+                / (self.n_devices * PEAK_FLOPS_BF16 * t))
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "wire_bytes_per_device": self.wire_bytes_per_device,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops_total": self.model_flops_total,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_upper_bound": self.mfu_upper_bound,
+        }
+
+
+def model_flops_for_step(cfg, step_kind: str, seq_len: int, global_batch: int
+                         ) -> float:
+    """6·N·D (train) / 2·N·D (inference) with N = active params."""
+    n_active = cfg.active_param_count()
+    tokens = (seq_len * global_batch if step_kind in ("train", "prefill")
+              else global_batch)
+    mult = 6.0 if step_kind == "train" else 2.0
+    return mult * n_active * tokens

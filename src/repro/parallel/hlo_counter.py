@@ -1,0 +1,337 @@
+"""Static HLO cost counter with while-loop trip multipliers.
+
+``compiled.cost_analysis()`` counts each computation once, but our programs
+put the layer stack (and attention/loss chunking) inside ``while`` loops —
+undercounting flops, bytes and collectives by the trip count.  This module
+parses the post-SPMD optimized HLO text and computes:
+
+* **dot flops** — 2 · prod(output dims) · prod(contracting dims), recursively
+  through fusions, × enclosing while trip counts;
+* **collective wire bytes** — ring-model per-chip bytes per collective kind,
+  × trip counts;
+* **HBM traffic proxy** — Σ (operand + result bytes) of ops that must touch
+  HBM on a well-fused TPU program — dots/convs, collectives, copies,
+  (dynamic-)slices/updates, gathers/scatters/sorts/concats — × trip counts.
+  Elementwise/reduction fusion I/O is deliberately EXCLUDED: on TPU those fuse
+  into the surrounding matmuls (and the Pallas flash kernels fuse softmax/norm
+  traffic), whereas the CPU backend's kLoop fusions would count it ~5× over.
+  The proxy still double-counts producer→consumer handoffs between counted
+  ops (a result counted once as output, once as the next op's input), so it
+  is a mild overestimate — consistent across cells, which is what the
+  hillclimb needs.
+
+Operands are name references in optimized HLO, so shapes are resolved through
+a per-computation symbol table.  Trip counts come from the comparison constant
+in each while condition — exact for ``lax.scan``-generated counted loops.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_TOKEN = re.compile(
+    r"\b(pred|s4|u4|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)"
+    r"\[([0-9,]*)\]")
+
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_INST = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPND = re.compile(r"%([\w.\-]+)")
+_DOT_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUP_LIST = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUP_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONST = re.compile(r"constant\((\d+)\)")
+
+
+def _shapes_bytes(shapes: List[Tuple[str, str]]) -> int:
+    total = 0
+    for d, s in shapes:
+        n = 1
+        if s:
+            for x in s.split(","):
+                n *= int(x)
+        total += n * _DTYPE_BYTES[d]
+    return total
+
+
+def _prod(dims: str) -> int:
+    n = 1
+    if dims:
+        for x in dims.split(","):
+            n *= int(x)
+    return n
+
+
+@dataclass
+class Instruction:
+    name: str
+    opcode: str
+    result_shapes: List[Tuple[str, str]]
+    operands: List[str]
+    attrs: str
+    raw: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction] = field(default_factory=list)
+    shapes: Dict[str, List[Tuple[str, str]]] = field(default_factory=dict)
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        ls = line.strip()
+        if cur is None or (line and not line.startswith(" ")):
+            # potential computation header (column-0 lines)
+            if ls.endswith("{") and "HloModule" not in ls:
+                hm = _HDR.match(ls)
+                if hm:
+                    cur = Computation(hm.group(2))
+                    comps[cur.name] = cur
+                    if hm.group(1):
+                        entry = cur.name
+                continue
+        if ls.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INST.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        om = re.search(r" ([a-z][a-z0-9\-]*)\(", " " + rest)
+        if not om:
+            continue
+        opcode = om.group(1)
+        result_part = rest[: om.start()]
+        call_part = rest[om.start():]
+        depth = 0
+        end = len(call_part) - 1
+        for i, ch in enumerate(call_part):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str = call_part[: end + 1]
+        attrs = call_part[end + 1:]
+        inst = Instruction(
+            name=name,
+            opcode=opcode,
+            result_shapes=_SHAPE_TOKEN.findall(result_part),
+            operands=_OPND.findall(operand_str),
+            attrs=attrs,
+            raw=rest,
+        )
+        cur.instructions.append(inst)
+        cur.shapes[name] = inst.result_shapes
+    return comps, entry
+
+
+def _operand_bytes(comp: Computation, inst: Instruction) -> int:
+    total = 0
+    for op in inst.operands:
+        total += _shapes_bytes(comp.shapes.get(op, []))
+    return total
+
+
+def _operand_shape(comp: Computation, inst: Instruction, idx: int
+                   ) -> List[Tuple[str, str]]:
+    if idx < len(inst.operands):
+        return comp.shapes.get(inst.operands[idx], [])
+    return []
+
+
+def _dot_flops(comp: Computation, inst: Instruction) -> float:
+    out_elems = sum(_prod(s) for _, s in inst.result_shapes)
+    k = 1
+    cm = _DOT_CONTRACT.search(inst.attrs)
+    lhs_shapes = _operand_shape(comp, inst, 0)
+    if cm and cm.group(1) and lhs_shapes:
+        dims = lhs_shapes[0][1]
+        lhs = [int(d) for d in dims.split(",")] if dims else []
+        for ci in cm.group(1).split(","):
+            ci = int(ci)
+            if ci < len(lhs):
+                k *= lhs[ci]
+    return 2.0 * out_elems * k
+
+
+def _while_trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for inst in cond.instructions:
+        if inst.opcode == "constant":
+            cm = _CONST.search(inst.raw)
+            if cm:
+                best = max(best, int(cm.group(1)))
+        # comparison constants may sit inside a fused compare computation
+        for am in re.finditer(r"calls=%([\w.\-]+)", inst.attrs):
+            sub = comps.get(am.group(1))
+            if sub:
+                for si in sub.instructions:
+                    cm = _CONST.search(si.raw)
+                    if cm and si.opcode == "constant":
+                        best = max(best, int(cm.group(1)))
+    return best
+
+
+_MEM_SKIP = {"tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+             "after-all", "partition-id", "replica-id", "copy-done",
+             "all-gather-done", "all-reduce-done", "collective-permute-done",
+             "send", "recv", "send-done", "recv-done"}
+
+# ops whose I/O is counted toward the HBM-traffic proxy (see module docstring)
+_MEM_COUNT = {"dot", "convolution", "copy", "copy-start", "dynamic-slice",
+              "dynamic-update-slice", "gather", "scatter", "sort",
+              "concatenate"}
+
+
+@dataclass
+class HloCost:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+    collective_op_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_wire_bytes: Dict[str, float] = field(default_factory=dict)
+    n_while: int = 0
+    max_trip: int = 1
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.collective_wire_bytes.values())
+
+    def add_collective(self, kind: str, n: float, op_b: float, wire_b: float):
+        self.collective_counts[kind] = self.collective_counts.get(kind, 0) + n
+        self.collective_op_bytes[kind] = (
+            self.collective_op_bytes.get(kind, 0) + op_b)
+        self.collective_wire_bytes[kind] = (
+            self.collective_wire_bytes.get(kind, 0) + wire_b)
+
+
+def analyze(text: str) -> HloCost:
+    comps, entry = parse_hlo(text)
+    cost = HloCost()
+    if entry is None:
+        entry = next(iter(comps), None)
+        if entry is None:
+            return cost
+
+    fusion_flops_cache: Dict[str, float] = {}
+
+    def fusion_flops(comp_name: str) -> float:
+        if comp_name in fusion_flops_cache:
+            return fusion_flops_cache[comp_name]
+        comp = comps.get(comp_name)
+        fl = 0.0
+        if comp:
+            for inst in comp.instructions:
+                if inst.opcode in ("dot", "convolution"):
+                    fl += _dot_flops(comp, inst)
+                for am in re.finditer(r"calls=%([\w.\-]+)", inst.attrs):
+                    fl += fusion_flops(am.group(1))
+        fusion_flops_cache[comp_name] = fl
+        return fl
+
+    def walk(comp_name: str, mult: float) -> None:
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        for inst in comp.instructions:
+            op = inst.opcode
+            if op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", inst.attrs)
+                cm = re.search(r"condition=%?([\w.\-]+)", inst.attrs)
+                trips = _while_trip_count(comps, cm.group(1)) if cm else 1
+                cost.n_while += 1
+                cost.max_trip = max(cost.max_trip, trips)
+                if bm:
+                    walk(bm.group(1), mult * trips)
+                continue
+            if op in ("call", "async-start"):
+                for am in re.finditer(r"(?:to_apply|called_computations=\{?)="
+                                      r"?%?([\w.\-]+)", inst.attrs):
+                    walk(am.group(1), mult)
+                cm = re.search(r"to_apply=%?([\w.\-]+)", inst.attrs)
+                if cm:
+                    walk(cm.group(1), mult)
+                continue
+            if op == "conditional":
+                for am in re.finditer(r"%([\w.\-]+)", inst.attrs):
+                    if am.group(1) in comps:
+                        walk(am.group(1), mult)
+                continue
+            if op == "dynamic-update-slice":
+                # in-place slice write: traffic = read+write of the UPDATE
+                # operand, not the whole (aliased) buffer
+                upd = _operand_shape(comp, inst, 1)
+                cost.hbm_bytes += mult * 2 * _shapes_bytes(upd)
+                continue
+            if op in ("dynamic-slice", "gather"):
+                # read+write of the extracted slice only
+                cost.hbm_bytes += mult * 2 * _shapes_bytes(inst.result_shapes)
+                continue
+            if op == "scatter":
+                # in-place scatter: read+write of the updates operand
+                upd = _operand_shape(comp, inst, 2)
+                cost.hbm_bytes += mult * 2 * _shapes_bytes(upd)
+                continue
+            io_bytes = _operand_bytes(comp, inst) + _shapes_bytes(
+                inst.result_shapes)
+            if op in ("dot", "convolution"):
+                cost.dot_flops += mult * _dot_flops(comp, inst)
+                cost.hbm_bytes += mult * io_bytes
+                continue
+            if op == "fusion":
+                fm = re.search(r"calls=%([\w.\-]+)", inst.attrs)
+                if fm:
+                    fl = fusion_flops(fm.group(1))
+                    cost.dot_flops += mult * fl
+                    if fl > 0:  # fusions containing dots do hit HBM
+                        cost.hbm_bytes += mult * io_bytes
+                continue
+            kind = next((k for k in _COLLECTIVE_KINDS
+                         if op in (k, k + "-start")), None)
+            if kind is not None:
+                nbytes = _operand_bytes(comp, inst) or _shapes_bytes(
+                    inst.result_shapes)
+                gm = _GROUP_LIST.search(inst.attrs)
+                if gm:
+                    gsize = len(gm.group(1).split(","))
+                else:
+                    gi = _GROUP_IOTA.search(inst.attrs)
+                    gsize = int(gi.group(2)) if gi else 2
+                gsize = max(2, gsize)
+                ring = (gsize - 1) / gsize
+                if kind == "all-reduce":
+                    wire = 2.0 * ring * nbytes
+                elif kind == "collective-permute":
+                    wire = float(nbytes)
+                else:
+                    wire = ring * nbytes
+                cost.add_collective(kind, mult, mult * nbytes, mult * wire)
+                cost.hbm_bytes += mult * io_bytes
+                continue
+            if op in _MEM_COUNT:
+                cost.hbm_bytes += mult * io_bytes
+
+    walk(entry, 1.0)
+    return cost

@@ -1,0 +1,202 @@
+"""Parameter / state / batch PartitionSpec derivation.
+
+Leaf-path pattern table → logical axes → (via AxisRules) mesh PartitionSpecs.
+FSDP ("data") shards a storage dim of every large tensor; TP ("model") shards
+heads / ffn / experts / vocab.  XLA GSPMD inserts the FSDP all-gathers at use
+and grad reduce-scatters automatically; uneven dims (24 heads / 16 shards,
+92553 vocab / 16) are legal — GSPMD pads internally (verified in tests).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .axes import AxisRules
+
+# (regex over "/"-joined path, logical axes per trailing dims)
+# Leading scan/stack dims not covered by the pattern are replicated (None).
+_PARAM_RULES: List[Tuple[str, Tuple[Optional[str], ...]]] = [
+    # embeddings
+    (r"embed/tok$", ("vocab", "fsdp")),
+    (r"embed/unembed$", ("vocab", "fsdp")),
+    # attention
+    (r"attn/wq$", ("fsdp", "heads", None)),
+    (r"attn/wk$", ("fsdp", "kv_heads", None)),
+    (r"attn/wv$", ("fsdp", "kv_heads", None)),
+    (r"attn/wo$", ("heads", None, "fsdp")),
+    (r"attn/(q_norm|k_norm)$", (None,)),
+    # dense mlp / shared expert
+    (r"(mlp|shared)/w_gate$", ("fsdp", "ffn")),
+    (r"(mlp|shared)/w_up$", ("fsdp", "ffn")),
+    (r"(mlp|shared)/w_down$", ("ffn", "fsdp")),
+    (r"(mlp|shared)/b_(up|down)$", (None,)),
+    # moe (blocked layout (TP, E_loc, D, F_loc))
+    (r"moe/router$", (None, None)),
+    (r"moe/w_gate$", ("experts", None, "fsdp", None)),
+    (r"moe/w_up$", ("experts", None, "fsdp", None)),
+    (r"moe/w_down$", ("experts", None, None, "fsdp")),
+    # rg-lru
+    (r"rglru/w_x$", ("fsdp", "ffn")),
+    (r"rglru/w_gate$", ("fsdp", "ffn")),
+    (r"rglru/conv_[wb]$", None),  # tiny; replicate fully
+    (r"rglru/w_[ai]$", (None, "fsdp", "ffn")),
+    (r"rglru/(b_[ai]|lam)$", (None,)),
+    (r"rglru/w_out$", ("ffn", "fsdp")),
+    # mamba2
+    (r"blocks/in_proj$", ("fsdp", "ffn")),
+    (r"blocks/conv_[wb]$", None),
+    (r"blocks/(a_log|dt_bias|d_skip|out_norm)$", None),
+    (r"blocks/out_proj$", ("ffn", "fsdp")),
+    # norms
+    (r"norm", None),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(k.name)
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_logical_axes(params: Any) -> Any:
+    """Pytree of logical-axis tuples matching params (trailing-dims aligned)."""
+
+    def leaf_axes(path, leaf) -> Tuple[Optional[str], ...]:
+        ps = _path_str(path)
+        ndim = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+        for pat, axes in _PARAM_RULES:
+            if re.search(pat, ps):
+                if axes is None:
+                    return (None,) * ndim
+                pad = ndim - len(axes)
+                assert pad >= 0, f"{ps}: rank {ndim} < rule {axes}"
+                return (None,) * pad + tuple(axes)
+        if ndim <= 1:
+            return (None,) * ndim
+        raise ValueError(f"no partition rule for param leaf {ps} (rank {ndim})")
+
+    return jax.tree_util.tree_map_with_path(leaf_axes, params)
+
+
+def _axis_size(mesh: Optional[Mesh], names) -> int:
+    if mesh is None or names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    n = 1
+    for a in names:
+        if a is not None:
+            n *= mesh.shape[a]
+    return n
+
+
+def sanitize_spec(spec: P, shape, mesh: Optional[Mesh]) -> P:
+    """Drop sharding on dims the mesh cannot divide evenly.
+
+    pjit *argument* shardings must divide exactly (GSPMD only pads internal
+    constraints), so e.g. 24 heads / 16-way model axis or batch=1 / data axis
+    fall back to replication on that dim — the internal with_sharding_
+    constraint annotations still apply (padded) sharding to the activations.
+    """
+    out = []
+    for d, names in enumerate(spec):
+        if names is None:
+            out.append(None)
+            continue
+        div = _axis_size(mesh, names)
+        out.append(names if (d < len(shape) and shape[d] % div == 0) else None)
+    return P(*out)
+
+
+def make_param_specs(params: Any, rules: AxisRules,
+                     mesh: Optional[Mesh] = None) -> Any:
+    """Pytree of PartitionSpec for params (or same-shaped states)."""
+    axes = param_logical_axes(params)
+    is_axes_leaf = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    specs = jax.tree_util.tree_map(
+        lambda a: rules.spec(*a), axes, is_leaf=is_axes_leaf)
+    if mesh is None:
+        return specs
+    return jax.tree_util.tree_map(
+        lambda s, p: sanitize_spec(s, p.shape, mesh), specs, params,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_shardings(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# -- batch / cache specs -------------------------------------------------------
+
+def batch_logical_axes(batch_like: Any) -> Any:
+    def leaf_axes(path, leaf):
+        ndim = leaf.ndim
+        return ("batch",) + (None,) * (ndim - 1)
+    return jax.tree_util.tree_map_with_path(leaf_axes, batch_like)
+
+
+def make_batch_specs(batch_like: Any, rules: AxisRules,
+                     mesh: Optional[Mesh] = None) -> Any:
+    return jax.tree_util.tree_map(
+        lambda leaf: sanitize_spec(
+            rules.spec(*(("batch",) + (None,) * (leaf.ndim - 1))),
+            leaf.shape, mesh),
+        batch_like)
+
+
+def make_cache_specs(cfg, cache_like: Any, rules: AxisRules,
+                     mesh: Optional[Mesh] = None) -> Any:
+    """Decode-state sharding: batch over DP axes; long axes context-sharded.
+
+    * attention k/v caches: sequence dim over `model` (flash-decoding layout)
+    * mamba2 ssm state: head dim over `model`
+    * rg-lru h/conv states: width dim over `model`
+    """
+
+    def leaf_axes(path, leaf) -> Tuple[Optional[str], ...]:
+        ps = _path_str(path)
+        nd = leaf.ndim
+        if re.search(r"(^|/)(k|v)$", ps):
+            # (..., B, C, Hkv, Dh): batch at -4, cache seq at -3
+            lead = (None,) * (nd - 4)
+            return lead + ("batch", "kv_seq", None, None)
+        if ps.endswith("ssm"):  # (L, B, H, P, N)
+            return (None, "batch", "ssm_heads", None, None)
+        if ps.endswith("conv") and nd == 4:  # (L, B, K-1, conv_dim)
+            return (None, "batch", None, "ffn")
+        if ps.endswith("h") and nd == 3:  # (units, B, W)
+            return (None, "batch", "ffn")
+        if ps.endswith("conv") and nd == 3:  # tail rglru (B, K-1, W)
+            return ("batch", None, "ffn")
+        if ps.endswith("h") and nd == 2:
+            return ("batch", "ffn")
+        if nd >= 1:
+            lead = (None,) * (nd - 1)
+            return lead + (None,)
+        return ()
+
+    axes = jax.tree_util.tree_map_with_path(leaf_axes, cache_like)
+    is_axes_leaf = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    specs = jax.tree_util.tree_map(
+        lambda a: rules.spec(*a), axes, is_leaf=is_axes_leaf)
+    if mesh is None:
+        return specs
+    return jax.tree_util.tree_map(
+        lambda s, c: sanitize_spec(s, c.shape, mesh), specs, cache_like,
+        is_leaf=lambda x: isinstance(x, P))

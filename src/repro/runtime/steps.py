@@ -1,0 +1,55 @@
+"""Jittable step functions: train / prefill / decode.
+
+These are what the launcher jits (with shardings) and what the dry-run lowers
+for every (arch × shape) cell.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    grad_shardings=None) -> Callable:
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = lm.train_loss(cfg, p, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        if grad_shardings is not None:
+            # pin grads to the param sharding: GSPMD then lowers the data-
+            # parallel reduction as a reduce-scatter instead of an all-reduce
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        params, opt_state, opt_metrics = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_loss_fn(cfg: ModelConfig) -> Callable:
+    def loss_fn(params, batch):
+        loss, metrics = lm.train_loss(cfg, params, batch)
+        return loss, metrics
+    return loss_fn
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
+    def prefill_step(params, batch):
+        return lm.prefill(cfg, params, batch, max_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, cache, token, pos):
+        logits, cache = lm.decode_step(cfg, params, cache, token, pos)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, cache
+    return decode_step

@@ -1,0 +1,105 @@
+"""LoadGen (EtherLoadGen analogue): integrity, drops, latency, MSB search."""
+import numpy as np
+import pytest
+
+from repro.core import (BypassL2FwdServer, KernelStackServer, LoadGen,
+                        PacketPool, Port, TrafficPattern,
+                        find_max_sustainable_bandwidth)
+from repro.core.cost import HostCostModel
+
+
+def _setup(nports=1, pool_slots=2048, ring=256, wb=32):
+    pool = PacketPool(pool_slots, 1518)
+    ports = [Port.make(pool, ring_size=ring, writeback_threshold=wb)
+             for _ in range(nports)]
+    return pool, ports
+
+
+def test_l2fwd_payload_integrity():
+    """Paper §4.2: 'We always receive the correct content regardless of the
+    packet size and network configuration.'"""
+    for size in (64, 200, 512, 1400):
+        for nports in (1, 2):
+            pool, ports = _setup(nports)
+            server = BypassL2FwdServer(ports, burst_size=16)
+            lg = LoadGen(ports, verify_integrity=True)
+            rep = lg.run_closed_loop(server, n_packets=200, packet_size=size,
+                                     rng=np.random.default_rng(size))
+            assert rep.received == 200
+            assert rep.extras["integrity_errors"] == 0
+            assert rep.dropped == 0
+
+
+def test_kernel_stack_integrity():
+    pool, ports = _setup()
+    server = KernelStackServer(ports, cost_model=HostCostModel(
+        interrupt_cycles=0, syscall_cycles=0, per_packet_kernel_cycles=0))
+    lg = LoadGen(ports, verify_integrity=True)
+    rep = lg.run_closed_loop(server, n_packets=100, packet_size=300,
+                             rng=np.random.default_rng(0))
+    assert rep.received == 100
+    assert rep.extras["integrity_errors"] == 0
+
+
+def test_seq_and_timestamp_roundtrip():
+    pool, ports = _setup()
+    server = BypassL2FwdServer(ports)
+    lg = LoadGen(ports)
+    rep = lg.run(server, TrafficPattern(rate_gbps=0.05, packet_size=256),
+                 duration_s=0.05)
+    assert rep.received > 0
+    assert rep.latency is not None
+    assert rep.latency.min_ns > 0           # timestamps parsed & sane
+    assert rep.latency.p99_ns >= rep.latency.median_ns
+    assert rep.drop_pct == 0.0
+
+
+def test_overload_produces_drops():
+    """Tiny rings + huge offered rate must drop at the NIC, and the loadgen
+    must account every one (sent == received + dropped)."""
+    pool = PacketPool(64, 1518)
+    ports = [Port.make(pool, ring_size=8, writeback_threshold=8)]
+    # server that never polls: everything beyond ring+pool capacity drops
+    class DeadServer:
+        def poll_once(self):
+            return 0
+    lg = LoadGen(ports)
+    rep = lg.run(DeadServer(), TrafficPattern(rate_gbps=5.0, packet_size=1518),
+                 duration_s=0.05, drain_timeout_s=0.05)
+    assert rep.sent > 0
+    assert rep.dropped > 0
+    assert rep.received + rep.dropped == rep.sent
+
+
+def test_msb_search_finds_sustainable_rate():
+    def mk():
+        pool, ports = _setup(pool_slots=8192, ring=1024)
+        return BypassL2FwdServer(ports, burst_size=64), ports
+    msb, reports = find_max_sustainable_bandwidth(
+        mk, trial_s=0.05, refine_iters=2, start_gbps=0.1)
+    assert msb > 0
+    # the reported MSB trial itself had no drops
+    ok_trials = [r for r in reports if r.drop_pct == 0 and r.sent > 0]
+    assert ok_trials, "at least one sustainable trial"
+
+
+def test_trace_replay():
+    pool, ports = _setup()
+    server = BypassL2FwdServer(ports)
+    lg = LoadGen(ports)
+    trace = [(i * 100_000, 128 + (i % 3) * 64) for i in range(100)]
+    rep = lg.run(server, TrafficPattern(trace=trace), duration_s=0.05)
+    assert rep.sent == 100
+    assert rep.received == 100
+
+
+def test_bursty_and_poisson_patterns():
+    for kind in ("bursty", "poisson"):
+        pool, ports = _setup(pool_slots=8192, ring=2048, wb=32)
+        server = BypassL2FwdServer(ports, burst_size=64)
+        lg = LoadGen(ports)
+        rep = lg.run(server, TrafficPattern(rate_gbps=0.2, packet_size=512,
+                                            kind=kind, seed=1),
+                     duration_s=0.05)
+        assert rep.received > 0
+        assert rep.received + rep.dropped == rep.sent

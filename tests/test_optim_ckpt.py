@@ -1,0 +1,112 @@
+"""Optimizer + checkpoint manager unit tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.optim import adamw
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                            decay_steps=1000, grad_clip=100.0)
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    state = adamw.init(cfg, params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}  # d/dw ||w||^2
+        params, state, m = adamw.apply_updates(cfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_grad_clipping():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert float(norm) > 100
+    total = jnp.sqrt(sum(jnp.sum(x ** 2)
+                         for x in jax.tree_util.tree_leaves(clipped)))
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-5)
+
+
+def test_schedule_shape():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, decay_steps=100,
+                            min_lr_frac=0.1)
+    lrs = [float(adamw.schedule(cfg, jnp.int32(s))) for s in range(0, 120, 5)]
+    assert lrs[0] < lrs[1]                       # warming up
+    assert abs(lrs[2] - 1.0) < 0.05              # peak ≈ lr
+    assert lrs[-1] <= 0.12                       # decayed to min_lr_frac
+    assert all(l >= 0 for l in lrs)
+
+
+def test_int8_compression_roundtrip():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(256, 64)) * 0.01, jnp.float32)
+    q, scale = adamw.compress_int8(g)
+    back = adamw.decompress_int8(q, scale)
+    assert q.dtype == jnp.int8
+    # quantization error bounded by scale/2 per element
+    assert float(jnp.abs(back - g).max()) <= float(scale) * 0.51
+
+
+def test_bf16_params_master_fp32_update():
+    cfg = adamw.AdamWConfig(lr=0.01, warmup_steps=1, decay_steps=10)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = adamw.init(cfg, params)
+    grads = {"w": jnp.full((4,), 1e-4, jnp.float32)}
+    new_params, new_state, _ = adamw.apply_updates(cfg, params, grads, state)
+    assert new_params["w"].dtype == jnp.bfloat16
+    assert new_state.master["w"].dtype == jnp.float32
+    # master moved even though bf16 params may round
+    assert float(jnp.abs(new_state.master["w"] - 1.0).max()) > 0
+
+
+# -- checkpoint manager -------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.bfloat16)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save(5, tree, extra={"note": "x"}, block=True)
+    like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    restored, step, extra = mgr.restore(None, like)
+    assert step == 5 and extra["note"] == "x"
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(), block=True)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) == 2
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(), block=True)
+    # flip bytes in one array file
+    d = os.path.join(tmp_path, "step_000000001", "arrays")
+    f = os.path.join(d, sorted(os.listdir(d))[0])
+    raw = bytearray(open(f, "rb").read())
+    raw[-1] ^= 0xFF
+    open(f, "wb").write(bytes(raw))
+    with pytest.raises(IOError):
+        mgr.restore(1, _tree())
+
+
+def test_checkpoint_shape_mismatch(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(), block=True)
+    bad = {"a": jnp.zeros((2, 2)), "b": {"c": jnp.zeros((2,), jnp.bfloat16)}}
+    with pytest.raises(ValueError):
+        mgr.restore(1, bad)

@@ -1,0 +1,89 @@
+"""Property tests for the SPSC ring and packet pool (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.packet import PacketPool
+from repro.core.rings import SpscRing
+
+
+@given(capacity=st.integers(1, 64),
+       ops=st.lists(st.one_of(
+           st.tuples(st.just("push"), st.integers(0, 1000)),
+           st.tuples(st.just("pop"), st.integers(0, 0)),
+           st.tuples(st.just("push_burst"), st.integers(1, 20)),
+           st.tuples(st.just("pop_burst"), st.integers(1, 20)),
+       ), max_size=200))
+@settings(max_examples=100, deadline=None)
+def test_ring_fifo_and_conservation(capacity, ops):
+    """Ring is FIFO, never loses or duplicates accepted items, and respects
+    its capacity bound."""
+    ring = SpscRing(capacity)
+    model = []  # reference FIFO of accepted items
+    seq = 0
+    for op, arg in ops:
+        if op == "push":
+            ok = ring.try_push(seq)
+            if ok:
+                model.append(seq)
+            assert ok == (len(model) <= ring.capacity
+                          and model and model[-1] == seq) or not ok
+            seq += 1
+        elif op == "push_burst":
+            items = list(range(seq, seq + arg))
+            seq += arg
+            n = ring.push_burst(items)
+            model.extend(items[:n])
+        elif op == "pop":
+            got = ring.try_pop()
+            want = model.pop(0) if model else None
+            assert got == want
+        else:
+            got = ring.pop_burst(arg)
+            want = model[:arg]
+            del model[:arg]
+            assert got == want
+        assert len(ring) == len(model)
+        assert len(model) <= ring.capacity
+
+
+@given(n_slots=st.integers(1, 128),
+       takes=st.lists(st.integers(1, 50), max_size=30))
+@settings(max_examples=50, deadline=None)
+def test_pool_conservation(n_slots, takes):
+    """alloc/free conserve slots; no slot is handed out twice concurrently."""
+    pool = PacketPool(n_slots, 128)
+    live = set()
+    for t in takes:
+        got = pool.alloc_burst(t)
+        assert len(got) <= t
+        for s in got:
+            assert s not in live, "double allocation!"
+            live.add(s)
+        assert pool.n_free == n_slots - len(live)
+        # free half
+        back = list(live)[: len(live) // 2]
+        for s in back:
+            live.discard(s)
+        pool.free_burst(back)
+        assert pool.n_free == n_slots - len(live)
+
+
+def test_ring_wraparound():
+    ring = SpscRing(4)
+    for round_ in range(10):
+        assert ring.push_burst([round_ * 10 + i for i in range(4)]) == 4
+        assert ring.is_full()
+        assert not ring.try_push(999)
+        assert ring.pop_burst(4) == [round_ * 10 + i for i in range(4)]
+        assert ring.is_empty()
+    assert ring.enq_drops == 10
+
+
+def test_pool_zero_copy_views():
+    pool = PacketPool(4, 64)
+    s = pool.alloc()
+    pool.write_packet(s, seq=7, length=64, fill=3)
+    view = pool.view(s)
+    view[40] = 99  # mutate through the view
+    assert pool.arena[s, 40] == 99, "view must alias the arena (zero copy)"
