@@ -22,18 +22,23 @@ def make_setup(stack: str, nports: int = 1, ring: int = 1024,
                writeback_threshold: int = 32, burst: int = 64,
                pool_slots: int = 16384,
                cost: Optional[HostCostModel] = None,
-               sockbuf_budget: int = 16) -> Callable:
+               sockbuf_budget: int = 16,
+               n_queues: int = 1,
+               n_lcores: Optional[int] = None) -> Callable:
     """Returns a fresh-state factory for MSB searches / timed runs."""
 
     def factory() -> Tuple[object, List[Port]]:
         pool = PacketPool(pool_slots, 1518)
         ports = [Port.make(pool, ring_size=ring,
-                           writeback_threshold=writeback_threshold)
+                           writeback_threshold=writeback_threshold,
+                           n_queues=n_queues)
                  for _ in range(nports)]
         if stack == "bypass":
-            return BypassL2FwdServer(ports, burst_size=burst), ports
+            return BypassL2FwdServer(ports, burst_size=burst,
+                                     n_lcores=n_lcores), ports
         return KernelStackServer(ports, cost_model=cost or HostCostModel(),
-                                 sockbuf_budget=sockbuf_budget), ports
+                                 sockbuf_budget=sockbuf_budget,
+                                 n_lcores=n_lcores), ports
 
     return factory
 

@@ -1,19 +1,42 @@
-"""Paper Fig. 3(a): maximum sustainable bandwidth vs. #NIC ports,
+"""Paper Fig. 3(a): maximum sustainable bandwidth vs. #NIC ports AND #cores,
 Linux-kernel stack (iperf analogue) vs. DPDK bypass stack (L2Fwd analogue).
 
 Paper's claims to reproduce: (1) bypass ≫ kernel at every port count
 (5.4×/4.9× at 1/4 NICs in the paper); (2) bypass retains its advantage as
-ports scale.  NOTE: this container has ONE core, so aggregate scaling with
-ports is GIL-bound for both stacks; the per-stack RATIO is the reproduced
-quantity (see EXPERIMENTS.md).
+ports scale; (3) bandwidth scales with the number of cores, each core
+polling its own RSS-steered NIC queue.  NOTE: this container has ONE core,
+so aggregate scaling with ports/lcores is GIL-bound for both stacks; the
+per-stack RATIO and the per-queue balance are the reproduced quantities
+(see EXPERIMENTS.md).
 """
 from __future__ import annotations
+
+import numpy as np
+
+from repro.core import BypassL2FwdServer, LoadGen, PacketPool, Port
 
 from .common import emit, msb
 
 
+def _queue_balance(n_lcores: int, n_queues: int,
+                   n_packets: int = 4000) -> tuple:
+    """Closed-loop run on 1 port × n_queues × n_lcores; returns
+    (rss_imbalance, per-queue rx counts) for the cores×queues sweep."""
+    pool = PacketPool(16384, 1518)
+    ports = [Port.make(pool, ring_size=1024, n_queues=n_queues)]
+    server = BypassL2FwdServer(ports, burst_size=64, n_lcores=n_lcores)
+    lg = LoadGen(ports)
+    rep = lg.run_closed_loop(server, n_packets=n_packets, packet_size=512,
+                             window=256, rng=np.random.default_rng(0))
+    assert rep.received == n_packets, "balance run must conserve packets"
+    per_queue = [s.rx_packets for _, s in sorted(server.per_queue_stats().items())]
+    imb = rep.extras.get("p0_rss_imbalance", 1.0)
+    return imb, per_queue
+
+
 def run(trial_s: float = 0.12) -> dict:
     out = {}
+    # -- port-count axis (the seed sweep) ------------------------------------
     for nports in (1, 2, 3, 4):
         b_gbps, b_us = msb("bypass", trial_s=trial_s, nports=nports)
         k_gbps, k_us = msb("kernel", trial_s=trial_s, nports=nports)
@@ -22,6 +45,21 @@ def run(trial_s: float = 0.12) -> dict:
         emit(f"fig3a_bypass_{nports}port", b_us, f"msb_gbps={b_gbps:.3f}")
         emit(f"fig3a_kernel_{nports}port", k_us, f"msb_gbps={k_gbps:.3f}")
         emit(f"fig3a_ratio_{nports}port", 0.0, f"bypass_over_kernel={ratio:.2f}")
+    # -- cores×queues axis (multi-queue RSS NIC, one lcore per queue) --------
+    for n_lcores, n_queues in ((1, 1), (2, 2), (4, 4)):
+        b_gbps, b_us = msb("bypass", trial_s=trial_s, nports=1,
+                           n_queues=n_queues, n_lcores=n_lcores)
+        k_gbps, k_us = msb("kernel", trial_s=trial_s, nports=1,
+                           n_queues=n_queues, n_lcores=n_lcores)
+        imb, per_queue = _queue_balance(n_lcores, n_queues)
+        out[(n_lcores, n_queues)] = (b_gbps, k_gbps, imb)
+        emit(f"fig3a_bypass_{n_lcores}core_{n_queues}q", b_us,
+             f"msb_gbps={b_gbps:.3f}")
+        emit(f"fig3a_kernel_{n_lcores}core_{n_queues}q", k_us,
+             f"msb_gbps={k_gbps:.3f}")
+        emit(f"fig3a_balance_{n_lcores}core_{n_queues}q", 0.0,
+             f"rss_imbalance={imb:.3f};per_queue_rx="
+             + "/".join(str(c) for c in per_queue))
     return out
 
 

@@ -6,15 +6,22 @@ from .dca import BurstPlan, OccupancyTrace, run_burst_experiment
 from .descriptor import RxDescriptorRing, TxDescriptorRing, STATUS_DONE, STATUS_FREE
 from .kernel_stack import KernelStackServer, KernelStats
 from .loadgen import LoadGen, TrafficPattern, find_max_sustainable_bandwidth
+from .netstack import Lcore, NetworkStack, ServerStats
 from .packet import (
     DEFAULT_MTU,
     DEFAULT_TS_OFFSET,
     ETH_HEADER_SIZE,
+    FLOW_OFFSET,
+    FLOW_SIZE,
     MIN_FRAME,
     PacketPool,
     PacketRef,
     checksum,
+    flow_bytes,
+    flow_tuple_for_id,
     payload_checksum,
+    read_flow,
+    read_flow_bytes_vec,
     read_seq,
     read_seqs_vec,
     read_stamp,
@@ -22,23 +29,31 @@ from .packet import (
     stamp,
     swap_macs,
     swap_macs_vec,
+    write_flow,
+    write_flow_ids_vec,
     write_packets_vec,
     write_seq,
 )
-from .pmd import BypassL2FwdServer, PipelineServer, Port, ServerStats
+from .pmd import BypassL2FwdServer, PipelineServer, Port
 from .rings import SpscRing
-from .telemetry import LatencyRecorder, LatencyStats, RunReport, ThroughputMeter
+from .rss import DEFAULT_RSS_KEY, RssIndirection, toeplitz_hash, toeplitz_hash_vec
+from .telemetry import (LatencyRecorder, LatencyStats, QueueTelemetry,
+                        RunReport, ThroughputMeter, rss_skew)
 
 __all__ = [
     "BypassDataplane", "BypassL2FwdServer", "BurstPlan", "FeedStats",
     "HostCostModel", "KernelStackFeed", "KernelStackServer", "KernelStats",
-    "LatencyRecorder", "LatencyStats", "LoadGen", "OccupancyTrace",
-    "PacketPool", "PacketRef", "PipelineServer", "Port", "RunReport",
-    "RxDescriptorRing", "ServerStats", "SpscRing", "ThroughputMeter",
-    "TrafficPattern", "TxDescriptorRing", "ZERO_COST",
-    "checksum", "find_max_sustainable_bandwidth", "make_feed",
-    "payload_checksum", "read_seq", "read_stamp", "run_burst_experiment",
-    "spin_ns", "stamp", "swap_macs", "write_seq",
-    "DEFAULT_MTU", "DEFAULT_TS_OFFSET", "ETH_HEADER_SIZE", "MIN_FRAME",
-    "STATUS_DONE", "STATUS_FREE",
+    "LatencyRecorder", "LatencyStats", "Lcore", "LoadGen", "NetworkStack",
+    "OccupancyTrace", "PacketPool", "PacketRef", "PipelineServer", "Port",
+    "QueueTelemetry", "RssIndirection", "RunReport", "RxDescriptorRing",
+    "ServerStats", "SpscRing", "ThroughputMeter", "TrafficPattern",
+    "TxDescriptorRing", "ZERO_COST",
+    "checksum", "find_max_sustainable_bandwidth", "flow_bytes",
+    "flow_tuple_for_id", "make_feed", "payload_checksum", "read_flow",
+    "read_flow_bytes_vec", "read_seq", "read_stamp", "rss_skew",
+    "run_burst_experiment", "spin_ns", "stamp", "swap_macs",
+    "toeplitz_hash", "toeplitz_hash_vec", "write_flow", "write_flow_ids_vec",
+    "write_seq",
+    "DEFAULT_MTU", "DEFAULT_RSS_KEY", "DEFAULT_TS_OFFSET", "ETH_HEADER_SIZE",
+    "FLOW_OFFSET", "FLOW_SIZE", "MIN_FRAME", "STATUS_DONE", "STATUS_FREE",
 ]

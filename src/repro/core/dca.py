@@ -26,14 +26,30 @@ import numpy as np
 
 @dataclass(frozen=True)
 class BurstPlan:
-    """Processing-burst configuration shared by host + device paths."""
+    """Processing-burst configuration shared by host + device paths.
+
+    Applies **per-lcore**: each polling engine resolves its own burst via
+    :meth:`burst_for`, so heterogeneous lcores (e.g. one queue carrying an
+    elephant flow) can run different DCA-overlap depths in one experiment.
+    ``per_lcore=None`` keeps the uniform seed behaviour.
+    """
 
     burst_size: int = 32        # packets processed per poll (DPDK burst)
     prefetch_depth: int = 2     # transfers in flight (DCA overlap depth)
+    per_lcore: Optional[Tuple[int, ...]] = None  # per-lcore burst overrides
 
     def __post_init__(self) -> None:
         if self.burst_size < 1 or self.prefetch_depth < 1:
             raise ValueError("burst_size and prefetch_depth must be >= 1")
+        if self.per_lcore is not None:
+            if len(self.per_lcore) == 0 or any(b < 1 for b in self.per_lcore):
+                raise ValueError("per_lcore bursts must be a nonempty tuple of >= 1")
+
+    def burst_for(self, lcore_id: int) -> int:
+        """The burst size lcore ``lcore_id`` polls with."""
+        if self.per_lcore is None:
+            return self.burst_size
+        return self.per_lcore[lcore_id % len(self.per_lcore)]
 
 
 @dataclass

@@ -35,12 +35,14 @@ _EMPTY_I32 = np.empty(0, dtype=np.int32)
 
 
 class RxDescriptorRing:
-    def __init__(self, size: int, writeback_threshold: Optional[int] = None):
+    def __init__(self, size: int, writeback_threshold: Optional[int] = None,
+                 queue_id: int = 0):
         if size <= 0:
             raise ValueError("size must be positive")
         if writeback_threshold is not None and not (1 <= writeback_threshold <= size):
             raise ValueError("writeback_threshold must be in [1, size]")
         self.size = int(size)
+        self.queue_id = int(queue_id)  # which HW queue of the port this is
         # None == pathological "writeback only when all descriptors used"
         self.writeback_threshold = writeback_threshold
         self.slots = np.full(self.size, -1, dtype=np.int64)  # packet slot index
@@ -173,8 +175,9 @@ class TxDescriptorRing:
     poll discipline so PMD TX reclaim is burst-based too.
     """
 
-    def __init__(self, size: int):
+    def __init__(self, size: int, queue_id: int = 0):
         self.size = int(size)
+        self.queue_id = int(queue_id)
         self.slots = np.full(self.size, -1, dtype=np.int64)
         self.lengths = np.zeros(self.size, dtype=np.int32)
         self.head = 0  # driver cursor (next post)

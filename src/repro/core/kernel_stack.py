@@ -13,19 +13,27 @@ bottlenecks (paper §2) honestly:
    interrupt (one per descriptor-writeback event), each paying a modeled
    interrupt cost; per-packet protocol processing pays a modeled kernel cost.
 
+Runs on the unified :class:`~repro.core.netstack.NetworkStack` interface:
+each (port, queue) pair — multi-queue NICs expose one IRQ vector per queue —
+is serviced by a kernel "lcore" quantum: IRQ bottom half, then the
+application half.  Socket receive queues are per-queue ``deque``s (O(1)
+drain; the seed's ``list.pop(0)`` was O(n)).
+
 The contrast server, :class:`repro.core.pmd.BypassL2FwdServer`, does none of
 these: no syscalls, no interrupts, zero copies, no per-packet allocation.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .cost import HostCostModel, spin_ns
+from .netstack import Lcore, NetworkStack, ServerStats
 from .packet import swap_macs
-from .pmd import Port, ProcessFn, ServerStats
+from .pmd import Port, ProcessFn
 
 
 @dataclass
@@ -37,14 +45,16 @@ class KernelStats(ServerStats):
     allocs: int = 0
 
 
-class KernelStackServer:
-    """Interrupt-driven echo/forward server over N ports.
+class KernelStackServer(NetworkStack):
+    """Interrupt-driven echo/forward server over N multi-queue ports.
 
-    ``poll_once`` mimics the kernel + application flow for whatever packets an
-    interrupt has made visible: IRQ → skb alloc+copy → protocol processing →
-    read() syscall copy-to-user → application processing → sendto() syscall
-    copy-from-user → TX post.
+    Each lcore quantum on a (port, queue) pair mimics the kernel + application
+    flow for whatever packets that queue's interrupt has made visible:
+    IRQ → skb alloc+copy → protocol processing → read() syscall copy-to-user →
+    application processing → sendto() syscall copy-from-user → TX post.
     """
+
+    stats_cls = KernelStats
 
     def __init__(
         self,
@@ -52,57 +62,62 @@ class KernelStackServer:
         cost_model: Optional[HostCostModel] = None,
         sockbuf_budget: int = 16,  # packets drained per read() syscall
         process_fn: Optional[ProcessFn] = None,
+        n_lcores: Optional[int] = None,
     ):
-        self.ports = list(ports)
+        super().__init__(ports, n_lcores=n_lcores)
         self.cost = cost_model or HostCostModel()
         self.sockbuf_budget = sockbuf_budget
         self.process_fn = process_fn if process_fn is not None else swap_macs
-        self.stats = KernelStats()
-        # socket receive queues (skbs waiting for the app), per port
-        self._sock_queues: List[List[np.ndarray]] = [[] for _ in self.ports]
+        # socket receive queues (skbs waiting for the app), one per HW queue
+        self._sock_queues: Dict[Tuple[int, int], Deque[np.ndarray]] = {
+            pair: deque() for pair in self.queue_pairs
+        }
 
     # -- kernel half ----------------------------------------------------------
-    def _irq_bottom_half(self, port_idx: int) -> int:
+    def _irq_bottom_half(self, port_idx: int, queue_idx: int,
+                         qstats: KernelStats) -> int:
         """Interrupt: move written-back descriptors into the socket queue."""
         port = self.ports[port_idx]
-        batch = port.rx.poll(len(port.rx.status))  # kernel drains what's visible
+        ring = port.rx_queues[queue_idx]
+        batch = ring.poll(ring.size)  # kernel drains what's visible
         if not batch:
             return 0
-        self.stats.interrupts += 1
+        qstats.interrupts += 1
         spin_ns(self.cost.ns(self.cost.interrupt_cycles))
-        q = self._sock_queues[port_idx]
+        q = self._sock_queues[(port_idx, queue_idx)]
         for slot, length in batch:
             # copy 1: NIC DMA buffer -> fresh skb (real alloc + real copy)
             skb = np.array(port.pool.view(slot, length))  # allocates + copies
-            self.stats.allocs += 1
-            self.stats.copies += 1
-            self.stats.copied_bytes += length
+            qstats.allocs += 1
+            qstats.copies += 1
+            qstats.copied_bytes += length
             port.pool.free(slot)  # NIC buffer recycled immediately (kernel owns skb)
             spin_ns(self.cost.ns(self.cost.per_packet_kernel_cycles))
             q.append(skb)
         return len(batch)
 
     # -- application half ------------------------------------------------------
-    def _app_read_process_send(self, port_idx: int) -> int:
+    def _app_read_process_send(self, port_idx: int, queue_idx: int,
+                               qstats: KernelStats) -> int:
         port = self.ports[port_idx]
-        q = self._sock_queues[port_idx]
+        q = self._sock_queues[(port_idx, queue_idx)]
         if not q:
             return 0
         # read() syscall: drains up to sockbuf_budget skbs into user buffers
-        self.stats.syscalls += 1
+        qstats.syscalls += 1
         spin_ns(self.cost.ns(self.cost.syscall_cycles))
         n = min(self.sockbuf_budget, len(q))
         done = 0
         for _ in range(n):
-            skb = q.pop(0)
+            skb = q.popleft()
             # copy 2: skb -> user buffer (real alloc + copy)
             user_buf = np.array(skb)
-            self.stats.allocs += 1
-            self.stats.copies += 1
-            self.stats.copied_bytes += len(user_buf)
+            qstats.allocs += 1
+            qstats.copies += 1
+            qstats.copied_bytes += len(user_buf)
             self.process_fn(user_buf)
             # sendto() syscall per packet + copy 3: user buffer -> NIC TX buffer
-            self.stats.syscalls += 1
+            qstats.syscalls += 1
             spin_ns(self.cost.ns(self.cost.syscall_cycles))
             tx_slot = port.pool.alloc()
             if tx_slot is None:
@@ -110,28 +125,29 @@ class KernelStackServer:
             length = len(user_buf)
             port.pool.arena[tx_slot, :length] = user_buf
             port.pool.lengths[tx_slot] = length
-            self.stats.copies += 1
-            self.stats.copied_bytes += length
+            qstats.copies += 1
+            qstats.copied_bytes += length
             spin_ns(self.cost.ns(self.cost.per_packet_kernel_cycles))
-            if not port.tx.post(tx_slot, length):
+            if port.tx_queues[queue_idx].post(tx_slot, length):
+                qstats.tx_packets += 1
+            else:
                 port.pool.free(tx_slot)
-            self.stats.rx_packets += 1
-            self.stats.rx_bytes += length
+            qstats.rx_packets += 1
+            qstats.rx_bytes += length
             done += 1
         return done
 
-    def poll_once(self) -> int:
-        """One scheduling quantum: service IRQs then let the app run."""
-        total = 0
-        for i in range(len(self.ports)):
-            self._irq_bottom_half(i)
-            total += self._app_read_process_send(i)
-        self.stats.poll_iterations += 1
-        if total == 0:
-            self.stats.empty_polls += 1
-        self.stats.tx_packets = sum(p.tx.posted for p in self.ports)
-        return total
+    # -- lcore quantum ---------------------------------------------------------
+    def _service_queue(self, lcore: Lcore, port_idx: int, queue_idx: int,
+                       qstats: ServerStats) -> int:
+        """One scheduling quantum on one queue: service its IRQ, run the app."""
+        self._irq_bottom_half(port_idx, queue_idx, qstats)
+        done = self._app_read_process_send(port_idx, queue_idx, qstats)
+        qstats.poll_iterations += 1
+        if done == 0:
+            qstats.empty_polls += 1
+        return done
 
     @property
     def queued(self) -> int:
-        return sum(len(q) for q in self._sock_queues)
+        return sum(len(q) for q in self._sock_queues.values())

@@ -27,18 +27,23 @@ import numpy as np
 
 from .packet import (
     DEFAULT_TS_OFFSET,
+    FLOW_OFFSET,
+    FLOW_SIZE,
     MIN_FRAME,
     PacketPool,
+    flow_tuple_for_id,
     payload_checksum,
     read_seq,
     read_seqs_vec,
     read_stamp,
     read_stamps_vec,
     stamp,
+    write_flow,
+    write_flow_ids_vec,
     write_packets_vec,
 )
 from .pmd import Port
-from .telemetry import LatencyRecorder, RunReport, ThroughputMeter
+from .telemetry import LatencyRecorder, RunReport, ThroughputMeter, rss_skew
 
 
 class Server(Protocol):
@@ -78,11 +83,25 @@ class LoadGen:
         verify_integrity: bool = False,
         max_tx_burst: int = 64,
         latency_capacity_hint: int = 1 << 16,
+        n_flows: int = 256,
     ):
+        if n_flows < 1:
+            raise ValueError("n_flows must be >= 1")
+        # the flow 4-tuple occupies fixed bytes FLOW_OFFSET..FLOW_OFFSET+12;
+        # a timestamp stamped inside that window would be overwritten and
+        # every RTT would silently be garbage
+        if ts_offset + 8 > FLOW_OFFSET and ts_offset < FLOW_OFFSET + FLOW_SIZE:
+            raise ValueError(
+                f"ts_offset={ts_offset} overlaps the flow fields at "
+                f"[{FLOW_OFFSET}, {FLOW_OFFSET + FLOW_SIZE})"
+            )
         self.ports = list(ports)
         self.ts_offset = ts_offset
         self.verify_integrity = verify_integrity
         self.max_tx_burst = max_tx_burst
+        # distinct flow 4-tuples emitted round-robin; RSS spreads them over
+        # the port's RX queues (the Fig. 3(a) core-scaling traffic shape)
+        self.n_flows = n_flows
         self.latency = LatencyRecorder(latency_capacity_hint)
         self.meter = ThroughputMeter()
         self.flight = _Flight()
@@ -102,15 +121,15 @@ class LoadGen:
             slot, seq=seq, length=size, ts_offset=self.ts_offset,
             timestamp_ns=now_ns, fill=(seq & 0xFF) if rng is None else None, rng=rng,
         )
+        write_flow(port.pool.arena[slot], *flow_tuple_for_id(seq % self.n_flows))
         if self.verify_integrity:
             self.flight.checksums[seq] = payload_checksum(
                 port.pool.view(slot, size), self.ts_offset
             )
         self.flight.sent += 1
-        if not port.rx.nic_deliver(slot, size):
-            port.pool.free(slot)  # RX ring overflow → drop at the NIC
-            return False
-        return True
+        # RSS steers the frame to a queue; ring overflow → drop at the NIC
+        # (the Port recycles the buffer)
+        return port.deliver(slot, size)
 
     def _send_burst(self, port: Port, n: int, size: int, now_ns: int) -> int:
         """Vectorized burst emit (non-integrity fast path). Returns #delivered."""
@@ -122,16 +141,17 @@ class LoadGen:
         seqs = np.arange(self._next_seq, self._next_seq + len(slots), dtype=np.int64)
         self._next_seq += len(slots)
         write_packets_vec(port.pool, slots_arr, seqs, size, self.ts_offset, now_ns)
+        write_flow_ids_vec(port.pool, slots_arr, seqs % self.n_flows)
         lengths = np.full(len(slots), size, dtype=np.int32)
-        accepted = port.rx.nic_deliver_burst(slots_arr, lengths)
-        if accepted < len(slots):
-            port.pool.free_burst(slots[accepted:])  # RX overflow → drop at NIC
-        return accepted
+        # RSS routes the burst across the port's RX queues; per-queue ring
+        # overflow drops at the NIC (the Port recycles those buffers)
+        return port.deliver_burst(slots_arr, lengths)
 
     def _drain_port(self, port: Port, now_ns: int) -> int:
-        """Collect forwarded packets from TX; timestamp-compare for RTT."""
+        """Collect forwarded packets from every TX queue; timestamp-compare
+        for RTT."""
         if not self.verify_integrity:
-            slots, lengths = port.tx.drain_burst(self.max_tx_burst)
+            slots, lengths = port.drain_tx_bursts(self.max_tx_burst)
             n = len(slots)
             if n == 0:
                 return 0
@@ -142,7 +162,7 @@ class LoadGen:
             self.flight.received += n
             port.pool.free_burst([int(s) for s in slots])
             return n
-        done = port.tx.drain(self.max_tx_burst)
+        done = port.drain_tx(self.max_tx_burst)
         for slot, length in done:
             buf = port.pool.view(slot, length)
             sent_ns = read_stamp(buf, self.ts_offset)
@@ -170,7 +190,7 @@ class LoadGen:
                 self._send_one(self.ports[sent % len(self.ports)], packet_size, now, rng)
                 sent += 1
             for port in self.ports:
-                port.rx.flush()  # closed loop: no idle traffic to trigger writeback
+                port.flush_rx()  # closed loop: no idle traffic to trigger writeback
             server.poll_once()
             now = time.perf_counter_ns()
             for port in self.ports:
@@ -237,8 +257,8 @@ class LoadGen:
         while (self.flight.received < self.flight.sent
                and time.perf_counter_ns() < drain_end):
             for port in self.ports:
-                port.rx.flush()
-            if server.poll_once() == 0 and all(p.tx.pending == 0 for p in self.ports):
+                port.flush_rx()
+            if server.poll_once() == 0 and all(p.tx_pending == 0 for p in self.ports):
                 # nothing moving and nothing queued: remaining packets were dropped
                 break
             now = time.perf_counter_ns()
@@ -258,6 +278,19 @@ class LoadGen:
             histogram=self.latency.histogram(),
         )
         rep.extras["integrity_errors"] = float(self.flight.integrity_errors)
+        # per-queue NIC-side accounting (the RSS-skew observable); only
+        # reported for multi-queue ports to keep single-queue reports terse
+        for pi, port in enumerate(self.ports):
+            if port.n_queues <= 1:
+                continue
+            delivered = port.rx_queue_delivered()
+            dropped = port.rx_queue_dropped()
+            for qi in range(port.n_queues):
+                rep.extras[f"p{pi}q{qi}_rx_delivered"] = float(delivered[qi])
+                rep.extras[f"p{pi}q{qi}_rx_dropped"] = float(dropped[qi])
+            skew = rss_skew(delivered)
+            rep.extras[f"p{pi}_rss_imbalance"] = skew["max_over_mean"]
+            rep.extras[f"p{pi}_rss_cov"] = skew["cov"]
         return rep
 
 

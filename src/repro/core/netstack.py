@@ -1,0 +1,191 @@
+"""Unified NetworkStack interface: per-lcore engines over (port, queue) pairs.
+
+DPDK's execution model assigns each *lcore* (logical core) a set of
+(port, queue) pairs that it polls run-to-completion; with RSS steering flows
+to queues, cores scale without sharing — the paper's Fig. 3(a) core axis.
+This module is the common machinery all three servers
+(:class:`~repro.core.pmd.BypassL2FwdServer`,
+:class:`~repro.core.pmd.PipelineServer`,
+:class:`~repro.core.kernel_stack.KernelStackServer`) now run on:
+
+* :class:`Lcore` — one engine: an ordered list of (port, queue) assignments
+  plus its processing burst size (per-lcore via
+  :class:`~repro.core.dca.BurstPlan`).
+* :class:`NetworkStack` — owns the lcores and per-queue
+  :class:`ServerStats`.  ``poll_once`` schedules the lcores **sequentially
+  round-robin**, which is GIL-aware and deterministic: on a 1-core host it
+  measures exactly one core's worth of work in a reproducible order.
+  Threads are optional (``start_lcore_threads``) for hosts with real
+  parallelism.
+
+Stats discipline: every (port, queue) pair has its own :class:`ServerStats`
+written by exactly one lcore (no sharing, like DPDK's per-queue counters);
+``stack.stats`` aggregates them on read, so the seed-era single-stats API
+keeps working.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# Power-of-two burst-size bins: bucket i counts bursts of [2^i, 2^(i+1)).
+# Fixed size => stats memory is O(1) regardless of run length.
+N_BURST_BUCKETS = 12
+
+
+@dataclass
+class ServerStats:
+    rx_packets: int = 0
+    tx_packets: int = 0
+    rx_bytes: int = 0
+    poll_iterations: int = 0
+    empty_polls: int = 0
+    burst_count: int = 0
+    burst_packets: int = 0
+    burst_buckets: np.ndarray = field(
+        default_factory=lambda: np.zeros(N_BURST_BUCKETS, dtype=np.int64)
+    )
+
+    def record_burst(self, n: int) -> None:
+        self.burst_count += 1
+        self.burst_packets += int(n)
+        self.burst_buckets[min(max(int(n), 1).bit_length() - 1,
+                               N_BURST_BUCKETS - 1)] += 1
+
+    @property
+    def avg_burst(self) -> float:
+        return self.burst_packets / self.burst_count if self.burst_count else 0.0
+
+    @property
+    def burst_histogram(self) -> List[Dict[str, int]]:
+        """Fixed-bin view of burst sizes: [{lo, hi, count}], empty bins omitted."""
+        return [
+            {"lo": 1 << i, "hi": (1 << (i + 1)) - 1, "count": int(c)}
+            for i, c in enumerate(self.burst_buckets)
+            if c
+        ]
+
+    def merge_from(self, other: "ServerStats") -> "ServerStats":
+        """Accumulate another stats object (per-queue → aggregate)."""
+        for f in dataclasses.fields(other):
+            v = getattr(other, f.name)
+            if isinstance(v, np.ndarray):
+                getattr(self, f.name).__iadd__(v)
+            elif isinstance(v, int):
+                setattr(self, f.name, getattr(self, f.name, 0) + v)
+        return self
+
+
+@dataclass
+class Lcore:
+    """One polling engine: services its (port_idx, queue_idx) pairs in order."""
+
+    lcore_id: int
+    assignments: List[Tuple[int, int]]
+    burst_size: int = 32
+
+
+class NetworkStack:
+    """Base class every server implements: lcores + per-queue stats.
+
+    Subclasses implement :meth:`_service_queue` (one lcore quantum on one
+    queue) or override :meth:`run_lcore` for non-queue-parallel topologies
+    (the pipeline's stage lcores).
+    """
+
+    stats_cls = ServerStats
+
+    def __init__(
+        self,
+        ports: Sequence[object],
+        n_lcores: Optional[int] = None,
+        burst_size: int = 32,
+        plan: Optional[object] = None,  # duck-typed BurstPlan (burst_for)
+    ):
+        self.ports = list(ports)
+        self.queue_pairs: List[Tuple[int, int]] = [
+            (pi, qi)
+            for pi, p in enumerate(self.ports)
+            for qi in range(getattr(p, "n_queues", 1))
+        ]
+        if n_lcores is None:
+            n_lcores = len(self.queue_pairs)  # DPDK default: one lcore per queue
+        if n_lcores < 1:
+            raise ValueError("n_lcores must be >= 1")
+        self.lcores: List[Lcore] = []
+        for i in range(n_lcores):
+            assigned = [pr for j, pr in enumerate(self.queue_pairs)
+                        if j % n_lcores == i]
+            b = plan.burst_for(i) if plan is not None else burst_size
+            self.lcores.append(Lcore(i, assigned, b))
+        self.queue_stats: Dict[Tuple[int, int], ServerStats] = {
+            pr: self.stats_cls() for pr in self.queue_pairs
+        }
+        self._stop_evt = threading.Event()
+        self._threads: List[threading.Thread] = []
+
+    # -- scheduling -----------------------------------------------------------
+    def poll_once(self) -> int:
+        """One scheduling round: every lcore runs once, sequentially.
+
+        Deterministic (fixed lcore order, fixed assignment order within each
+        lcore) so single-core measurements are exactly reproducible.
+        """
+        total = 0
+        for lcore in self.lcores:
+            total += self.run_lcore(lcore)
+        return total
+
+    def run_lcore(self, lcore: Lcore) -> int:
+        """One run-to-completion pass over the lcore's assigned queues."""
+        total = 0
+        for pi, qi in lcore.assignments:
+            total += self._service_queue(lcore, pi, qi, self.queue_stats[(pi, qi)])
+        return total
+
+    def _service_queue(self, lcore: Lcore, port_idx: int, queue_idx: int,
+                       qstats: ServerStats) -> int:
+        raise NotImplementedError
+
+    # -- optional threaded execution (real-parallelism hosts) -----------------
+    def start_lcore_threads(self) -> None:
+        """Run each lcore in its own thread (GIL-serialized on 1-core hosts;
+        use sequential ``poll_once`` for bandwidth numbers there)."""
+        if self._threads:
+            return
+        self._stop_evt.clear()
+
+        def loop(lc: Lcore) -> None:
+            while not self._stop_evt.is_set():
+                self.run_lcore(lc)
+
+        self._threads = [
+            threading.Thread(target=loop, args=(lc,), daemon=True,
+                             name=f"lcore-{lc.lcore_id}")
+            for lc in self.lcores
+        ]
+        for t in self._threads:
+            t.start()
+
+    def stop_lcore_threads(self) -> None:
+        self._stop_evt.set()
+        for t in self._threads:
+            t.join(timeout=5)
+        self._threads = []
+
+    # -- stats ----------------------------------------------------------------
+    def per_queue_stats(self) -> Dict[Tuple[int, int], ServerStats]:
+        """Per-(port, queue) counters; each written by exactly one lcore."""
+        return dict(self.queue_stats)
+
+    @property
+    def stats(self) -> ServerStats:
+        """Aggregate across all queues (seed-compatible single-stats view)."""
+        agg = self.stats_cls()
+        for st in self.queue_stats.values():
+            agg.merge_from(st)
+        return agg

@@ -15,19 +15,24 @@ Wire layout (offsets in bytes), loosely Ethernet-shaped:
     22..29  u64 transmit timestamp in ns (the EtherLoadGen stamp; offset is
             configurable per the paper — "adds a timestamp to each outgoing
             packet at a configurable offset")
-    30..    payload
+    30..41  flow 4-tuple, big endian (src_ip u32, dst_ip u32, src_port u16,
+            dst_port u16) — the fields RSS hashes to steer the frame to an
+            RX queue (see :mod:`repro.core.rss`)
+    42..    payload
 """
 from __future__ import annotations
 
 import zlib
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 ETH_HEADER_SIZE = 14
 SEQ_OFFSET = 14
 DEFAULT_TS_OFFSET = 22
+FLOW_OFFSET = 30
+FLOW_SIZE = 12  # src_ip(4) + dst_ip(4) + src_port(2) + dst_port(2), big endian
 MIN_FRAME = 64
 DEFAULT_MTU = 1518
 ETHERTYPE = 0x88B5
@@ -148,6 +153,43 @@ def swap_macs(buf: np.ndarray) -> None:
     buf[6:12] = tmp
 
 
+def flow_tuple_for_id(flow_id: int) -> Tuple[int, int, int, int]:
+    """Synthetic (src_ip, dst_ip, src_port, dst_port) for an abstract flow id.
+
+    Distinct ids differ in src_ip and src_port — the fields real load
+    generators sweep — so distinct flows hash apart under RSS.
+    """
+    flow_id = int(flow_id)
+    src_ip = 0x0A000000 | (flow_id & 0xFFFF)          # 10.0.x.x
+    dst_ip = 0xC0A80001                                # 192.168.0.1
+    src_port = 1024 + (flow_id % 60000)
+    dst_port = 443
+    return src_ip, dst_ip, src_port, dst_port
+
+
+def write_flow(buf: np.ndarray, src_ip: int, dst_ip: int,
+               src_port: int, dst_port: int) -> None:
+    """Write the RSS flow 4-tuple (big endian, like the wire)."""
+    raw = (int(src_ip).to_bytes(4, "big") + int(dst_ip).to_bytes(4, "big")
+           + int(src_port).to_bytes(2, "big") + int(dst_port).to_bytes(2, "big"))
+    buf[FLOW_OFFSET : FLOW_OFFSET + FLOW_SIZE] = np.frombuffer(raw, dtype=np.uint8)
+
+
+def read_flow(buf: np.ndarray) -> Tuple[int, int, int, int]:
+    raw = bytes(buf[FLOW_OFFSET : FLOW_OFFSET + FLOW_SIZE])
+    return (
+        int.from_bytes(raw[0:4], "big"),
+        int.from_bytes(raw[4:8], "big"),
+        int.from_bytes(raw[8:10], "big"),
+        int.from_bytes(raw[10:12], "big"),
+    )
+
+
+def flow_bytes(buf: np.ndarray) -> np.ndarray:
+    """Zero-copy view of the 12 flow-tuple bytes (the RSS hash input)."""
+    return buf[FLOW_OFFSET : FLOW_OFFSET + FLOW_SIZE]
+
+
 def checksum(buf: np.ndarray) -> int:
     """CRC32 over the whole frame (payload-integrity check, paper §4.2)."""
     return zlib.crc32(buf.tobytes()) & 0xFFFFFFFF
@@ -203,6 +245,29 @@ def read_stamps_vec(pool: PacketPool, slots: np.ndarray, ts_offset: int) -> np.n
 def read_seqs_vec(pool: PacketPool, slots: np.ndarray) -> np.ndarray:
     raw = pool.arena[slots, SEQ_OFFSET : SEQ_OFFSET + 8]
     return raw.copy().view("<u8").reshape(-1).astype(np.int64)
+
+
+def write_flow_ids_vec(pool: PacketPool, slots: np.ndarray,
+                       flow_ids: np.ndarray) -> None:
+    """Write synthetic flow 4-tuples for a burst (one fancy-indexed store).
+
+    Same mapping as :func:`flow_tuple_for_id`, vectorized over the burst.
+    """
+    arena = pool.arena
+    ids = flow_ids.astype(np.int64)
+    src_ip = (0x0A000000 | (ids & 0xFFFF)).astype(">u4")
+    dst_ip = np.full(len(ids), 0xC0A80001, dtype=">u4")
+    src_port = (1024 + (ids % 60000)).astype(">u2")
+    dst_port = np.full(len(ids), 443, dtype=">u2")
+    arena[slots, FLOW_OFFSET : FLOW_OFFSET + 4] = src_ip.view(np.uint8).reshape(-1, 4)
+    arena[slots, FLOW_OFFSET + 4 : FLOW_OFFSET + 8] = dst_ip.view(np.uint8).reshape(-1, 4)
+    arena[slots, FLOW_OFFSET + 8 : FLOW_OFFSET + 10] = src_port.view(np.uint8).reshape(-1, 2)
+    arena[slots, FLOW_OFFSET + 10 : FLOW_OFFSET + 12] = dst_port.view(np.uint8).reshape(-1, 2)
+
+
+def read_flow_bytes_vec(pool: PacketPool, slots: np.ndarray) -> np.ndarray:
+    """(N, 12) raw flow-tuple bytes for a burst — the RSS hash input."""
+    return pool.arena[slots, FLOW_OFFSET : FLOW_OFFSET + FLOW_SIZE]
 
 
 def swap_macs_vec(pool: PacketPool, slots: np.ndarray,

@@ -1,12 +1,21 @@
 """Polling-mode driver (PMD) engine — the DPDK analogue.
 
-Implements the two DPDK execution models from the paper (§2):
+Implements the two DPDK execution models from the paper (§2), both on the
+unified :class:`~repro.core.netstack.NetworkStack` lcore machinery:
 
 * **Run-to-completion**: "(1) retrieve RX packets through polling mode driver
   (PMD) RX API, (2) process packets on the same logical core, (3) send pending
-  packets through PMD TX API."  → :meth:`BypassL2FwdServer.poll_once`.
+  packets through PMD TX API."  → :class:`BypassL2FwdServer`, one lcore per
+  (port, queue) pair by default.
 * **Pipeline**: "lets cores pass packets between each other via a ring buffer"
-  → :class:`PipelineServer` (stages linked by SPSC rings, one thread each).
+  → :class:`PipelineServer` (rx/work/tx stage lcores linked by SPSC rings;
+  sequential ``poll_once`` or optional threads).
+
+The NIC model is multi-queue: a :class:`Port` owns ``n_queues`` RX/TX
+descriptor-ring pairs over the shared :class:`~repro.core.packet.PacketPool`,
+and received frames are steered to a queue by Toeplitz RSS over the flow
+fields in the frame header (:mod:`repro.core.rss`) — the mechanism that makes
+bandwidth scale with cores in the paper's Fig. 3(a).
 
 Zero-copy discipline: a packet never leaves its arena slot between RX and TX —
 processing operates on numpy views, and TX posts the same slot the NIC DMA'd
@@ -15,62 +24,178 @@ per packet.
 """
 from __future__ import annotations
 
-import threading
-from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .descriptor import RxDescriptorRing, TxDescriptorRing
-from .packet import PacketPool, swap_macs, swap_macs_vec
+from .netstack import Lcore, NetworkStack, ServerStats
+from .packet import PacketPool, read_flow_bytes_vec, swap_macs, swap_macs_vec
 from .rings import SpscRing
+from .rss import RssIndirection
 
 ProcessFn = Callable[[np.ndarray], None]  # in-place packet transform
 # in-place burst transform over (pool, slots, lengths)
 BurstProcessFn = Callable[[PacketPool, np.ndarray, np.ndarray], None]
 
+_EMPTY_I64 = np.empty(0, dtype=np.int64)
+_EMPTY_I32 = np.empty(0, dtype=np.int32)
 
-@dataclass
+
 class Port:
-    """One NIC port: RX + TX descriptor rings over a shared packet pool."""
+    """One NIC port: ``n_queues`` RX/TX descriptor-ring pairs + RSS steering
+    over a shared packet pool."""
 
-    rx: RxDescriptorRing
-    tx: TxDescriptorRing
-    pool: PacketPool
+    def __init__(
+        self,
+        pool: PacketPool,
+        rx_queues: Sequence[RxDescriptorRing],
+        tx_queues: Sequence[TxDescriptorRing],
+        rss: Optional[RssIndirection] = None,
+    ):
+        if not rx_queues or len(rx_queues) != len(tx_queues):
+            raise ValueError("need equal, nonzero RX and TX queue counts")
+        self.pool = pool
+        self.rx_queues = list(rx_queues)
+        self.tx_queues = list(tx_queues)
+        self.rss = rss if rss is not None else RssIndirection(len(self.rx_queues))
 
     @staticmethod
     def make(
         pool: PacketPool,
         ring_size: int = 256,
         writeback_threshold: Optional[int] = 32,
+        n_queues: int = 1,
+        rss: Optional[RssIndirection] = None,
     ) -> "Port":
         return Port(
-            rx=RxDescriptorRing(ring_size, writeback_threshold=writeback_threshold),
-            tx=TxDescriptorRing(ring_size),
-            pool=pool,
+            pool,
+            rx_queues=[
+                RxDescriptorRing(ring_size, writeback_threshold=writeback_threshold,
+                                 queue_id=q)
+                for q in range(n_queues)
+            ],
+            tx_queues=[TxDescriptorRing(ring_size, queue_id=q)
+                       for q in range(n_queues)],
+            rss=rss,
         )
 
+    @property
+    def n_queues(self) -> int:
+        return len(self.rx_queues)
 
-@dataclass
-class ServerStats:
-    rx_packets: int = 0
-    tx_packets: int = 0
-    rx_bytes: int = 0
-    poll_iterations: int = 0
-    empty_polls: int = 0
-    burst_histogram: List[int] = field(default_factory=list)
+    # -- legacy single-queue views (the seed-era API; queue 0) ---------------
+    @property
+    def rx(self) -> RxDescriptorRing:
+        return self.rx_queues[0]
 
     @property
-    def avg_burst(self) -> float:
-        return float(np.mean(self.burst_histogram)) if self.burst_histogram else 0.0
+    def tx(self) -> TxDescriptorRing:
+        return self.tx_queues[0]
+
+    # -- NIC-side delivery (the RSS steering point) --------------------------
+    def deliver(self, packet_slot: int, length: int) -> bool:
+        """Steer one received frame to its RSS queue.  On ring overflow the
+        frame is dropped at the NIC and its buffer recycled; returns False."""
+        if self.n_queues == 1:
+            q = 0
+        else:
+            q = self.rss.steer_one(read_flow_bytes_vec(
+                self.pool, np.array([packet_slot])))
+        if not self.rx_queues[q].nic_deliver(packet_slot, length):
+            self.pool.free(packet_slot)
+            return False
+        return True
+
+    def deliver_burst(self, packet_slots: np.ndarray, lengths: np.ndarray) -> int:
+        """RSS-steered burst delivery: one hash + one indirection lookup for
+        the whole burst, then one ``nic_deliver_burst`` per touched queue.
+        Dropped frames (per-queue ring overflow) are freed back to the pool.
+        Returns the number accepted."""
+        n = len(packet_slots)
+        if n == 0:
+            return 0
+        if self.n_queues == 1:
+            ring = self.rx_queues[0]
+            accepted = ring.nic_deliver_burst(packet_slots, lengths)
+            if accepted < n:
+                self.pool.free_burst([int(s) for s in packet_slots[accepted:]])
+            return accepted
+        queues = self.rss.steer(read_flow_bytes_vec(self.pool, packet_slots))
+        accepted = 0
+        for q in range(self.n_queues):
+            mask = queues == q
+            if not mask.any():
+                continue
+            qslots = packet_slots[mask]
+            qlens = lengths[mask]
+            take = self.rx_queues[q].nic_deliver_burst(qslots, qlens)
+            accepted += take
+            if take < len(qslots):
+                self.pool.free_burst([int(s) for s in qslots[take:]])
+        return accepted
+
+    def flush_rx(self) -> None:
+        """Timeout-driven descriptor-cache writeback, all queues."""
+        for ring in self.rx_queues:
+            ring.flush()
+
+    # -- wire-side TX drain (the loadgen pulls from every queue) -------------
+    def drain_tx(self, max_n_per_queue: int) -> List[Tuple[int, int]]:
+        out: List[Tuple[int, int]] = []
+        for ring in self.tx_queues:
+            out.extend(ring.drain(max_n_per_queue))
+        return out
+
+    def drain_tx_bursts(self, max_n_per_queue: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized drain across all TX queues → concatenated arrays."""
+        slots_parts: List[np.ndarray] = []
+        len_parts: List[np.ndarray] = []
+        for ring in self.tx_queues:
+            s, l = ring.drain_burst(max_n_per_queue)
+            if len(s):
+                slots_parts.append(s)
+                len_parts.append(l)
+        if not slots_parts:
+            return _EMPTY_I64, _EMPTY_I32
+        return np.concatenate(slots_parts), np.concatenate(len_parts)
+
+    # -- aggregates / telemetry ----------------------------------------------
+    @property
+    def tx_pending(self) -> int:
+        return sum(r.pending for r in self.tx_queues)
+
+    @property
+    def tx_posted(self) -> int:
+        return sum(r.posted for r in self.tx_queues)
+
+    @property
+    def rx_delivered(self) -> int:
+        return sum(r.delivered for r in self.rx_queues)
+
+    @property
+    def rx_dropped(self) -> int:
+        return sum(r.dropped for r in self.rx_queues)
+
+    def rx_queue_delivered(self) -> List[int]:
+        return [r.delivered for r in self.rx_queues]
+
+    def rx_queue_dropped(self) -> List[int]:
+        return [r.dropped for r in self.rx_queues]
+
+    def queue_occupancy(self) -> List[int]:
+        """Per-RX-queue descriptor occupancy (the RSS-skew observable)."""
+        return [r.in_flight for r in self.rx_queues]
 
 
-class BypassL2FwdServer:
-    """Run-to-completion DPDK L2Fwd over N ports (the paper's workload).
+class BypassL2FwdServer(NetworkStack):
+    """Run-to-completion DPDK L2Fwd over N multi-queue ports.
 
-    Each ``poll_once`` is one lcore loop iteration: rx_burst → process in place
-    → tx_burst, per port.  ``burst_size`` is the DPDK burst knob that the DCA
-    use-case (paper §5.2) sweeps.
+    Each lcore quantum on a (port, queue) pair is one DPDK loop iteration:
+    rx_burst → process in place → tx_burst on the same queue.  ``burst_size``
+    is the DPDK burst knob the DCA use-case (paper §5.2) sweeps — pass a
+    :class:`~repro.core.dca.BurstPlan` for per-lcore bursts.  ``n_lcores``
+    defaults to one lcore per (port, queue) pair.
     """
 
     def __init__(
@@ -79,52 +204,57 @@ class BypassL2FwdServer:
         burst_size: int = 32,
         process_fn: Optional[ProcessFn] = None,
         burst_process_fn: Optional[BurstProcessFn] = None,
+        n_lcores: Optional[int] = None,
+        plan: Optional[object] = None,
     ):
         if burst_size <= 0:
             raise ValueError("burst_size must be positive")
         if process_fn is not None and burst_process_fn is not None:
             raise ValueError("pass either process_fn or burst_process_fn, not both")
-        self.ports = list(ports)
+        super().__init__(ports, n_lcores=n_lcores, burst_size=burst_size, plan=plan)
         self.burst_size = burst_size
         self.process_fn = process_fn
         # default: vectorized L2Fwd header rewrite over the whole burst
         self.burst_process_fn = burst_process_fn if burst_process_fn is not None else (
             None if process_fn is not None else swap_macs_vec
         )
-        self.stats = ServerStats()
 
-    def poll_once(self) -> int:
-        """One polling iteration across all ports. Returns packets forwarded."""
-        total = 0
-        for port in self.ports:
-            slots, lengths = port.rx.poll_burst(self.burst_size)
-            self.stats.poll_iterations += 1
-            n = len(slots)
-            if n == 0:
-                self.stats.empty_polls += 1
-                continue
-            self.stats.burst_histogram.append(n)
-            if self.burst_process_fn is not None:
-                self.burst_process_fn(port.pool, slots, lengths)  # zero copy, amortized
-            else:
-                for slot, length in zip(slots, lengths):
-                    self.process_fn(port.pool.view(int(slot), int(length)))
-            posted = port.tx.post_burst_vec(slots, lengths)
-            if posted < n:
-                port.pool.free_burst([int(s) for s in slots[posted:]])  # TX full: drop
-            self.stats.rx_packets += n
-            self.stats.rx_bytes += int(lengths.sum())
-            total += n
-        self.stats.tx_packets = sum(p.tx.posted for p in self.ports)
-        return total
+    def _service_queue(self, lcore: Lcore, port_idx: int, queue_idx: int,
+                       qstats: ServerStats) -> int:
+        port = self.ports[port_idx]
+        slots, lengths = port.rx_queues[queue_idx].poll_burst(lcore.burst_size)
+        qstats.poll_iterations += 1
+        n = len(slots)
+        if n == 0:
+            qstats.empty_polls += 1
+            return 0
+        qstats.record_burst(n)
+        if self.burst_process_fn is not None:
+            self.burst_process_fn(port.pool, slots, lengths)  # zero copy, amortized
+        else:
+            for slot, length in zip(slots, lengths):
+                self.process_fn(port.pool.view(int(slot), int(length)))
+        posted = port.tx_queues[queue_idx].post_burst_vec(slots, lengths)
+        if posted < n:
+            port.pool.free_burst([int(s) for s in slots[posted:]])  # TX full: drop
+        qstats.rx_packets += n
+        qstats.rx_bytes += int(lengths.sum())
+        qstats.tx_packets += posted
+        return n
 
 
-class PipelineServer:
-    """DPDK pipeline mode: RX core → worker core(s) → TX core, linked by rings.
+class PipelineServer(NetworkStack):
+    """DPDK pipeline mode: RX lcore → worker lcore → TX lcore, linked by rings.
 
-    Threaded; demonstrates the mode on real rings.  On a 1-core host the GIL
-    serializes the stages, so use run-to-completion for bandwidth numbers.
+    The three stages are stage-lcores on the NetworkStack scheduler: a
+    sequential ``poll_once`` runs rx → work → tx deterministically (the
+    1-core measurement mode), while ``start()`` runs each stage in its own
+    thread (GIL-serialized on a 1-core host; see DESIGN.md).  Multi-queue
+    aware: the RX stage polls every RX queue and frames return on the TX
+    queue they arrived on.
     """
+
+    _RX, _WORK, _TX = 0, 1, 2
 
     def __init__(
         self,
@@ -133,58 +263,66 @@ class PipelineServer:
         stage_ring_capacity: int = 1024,
         burst_size: int = 32,
     ):
+        super().__init__([port], n_lcores=1, burst_size=burst_size)
+        # stage lcores replace the default queue-parallel layout
+        all_queues = [(0, qi) for qi in range(port.n_queues)]
+        self.lcores = [Lcore(self._RX, all_queues, burst_size),
+                       Lcore(self._WORK, all_queues, burst_size),
+                       Lcore(self._TX, all_queues, burst_size)]
         self.port = port
         self.burst_size = burst_size
         self.process_fn = process_fn if process_fn is not None else swap_macs
         self.rx_to_work = SpscRing(stage_ring_capacity)
         self.work_to_tx = SpscRing(stage_ring_capacity)
-        self._stop = threading.Event()
-        self._threads: List[threading.Thread] = []
-        self.stats = ServerStats()
 
-    # each stage is a polling loop — no blocking anywhere
-    def _rx_stage(self) -> None:
-        while not self._stop.is_set():
-            batch = self.port.rx.poll(self.burst_size)
-            if batch:
-                pushed = self.rx_to_work.push_burst(batch)
-                for slot, _len in batch[pushed:]:
-                    self.port.pool.free(slot)  # stage ring full → drop
+    # each stage is a polling pass — no blocking anywhere
+    def run_lcore(self, lcore: Lcore) -> int:
+        if lcore.lcore_id == self._RX:
+            return self._rx_pass(lcore.burst_size)
+        if lcore.lcore_id == self._WORK:
+            return self._work_pass(lcore.burst_size)
+        return self._tx_pass(lcore.burst_size)
+
+    def _rx_pass(self, burst: int) -> int:
+        for qi, ring in enumerate(self.port.rx_queues):
+            qstats = self.queue_stats[(0, qi)]
+            batch = ring.poll(burst)
+            qstats.poll_iterations += 1
+            if not batch:
+                qstats.empty_polls += 1
+                continue
+            qstats.record_burst(len(batch))
+            items = [(slot, length, qi) for slot, length in batch]
+            pushed = self.rx_to_work.push_burst(items)
+            for slot, _len, _q in items[pushed:]:
+                self.port.pool.free(slot)  # stage ring full → drop
+        return 0
+
+    def _work_pass(self, burst: int) -> int:
+        batch = self.rx_to_work.pop_burst(burst)
+        for slot, length, qi in batch:
+            self.process_fn(self.port.pool.view(slot, length))
+            qstats = self.queue_stats[(0, qi)]
+            qstats.rx_packets += 1
+            qstats.rx_bytes += length
+        if batch:
+            pushed = self.work_to_tx.push_burst(batch)
+            for slot, _len, _q in batch[pushed:]:
+                self.port.pool.free(slot)  # stage ring full → drop
+        return len(batch)
+
+    def _tx_pass(self, burst: int) -> int:
+        batch = self.work_to_tx.pop_burst(burst)
+        for slot, length, qi in batch:
+            if self.port.tx_queues[qi].post(slot, length):
+                self.queue_stats[(0, qi)].tx_packets += 1
             else:
-                self.stats.empty_polls += 1
+                self.port.pool.free(slot)
+        return 0
 
-    def _work_stage(self) -> None:
-        while not self._stop.is_set():
-            batch = self.rx_to_work.pop_burst(self.burst_size)
-            for slot, length in batch:
-                self.process_fn(self.port.pool.view(slot, length))
-                self.stats.rx_packets += 1
-                self.stats.rx_bytes += length
-            if batch:
-                self.work_to_tx.push_burst(batch)
-
-    def _tx_stage(self) -> None:
-        while not self._stop.is_set():
-            batch = self.work_to_tx.pop_burst(self.burst_size)
-            for slot, length in batch:
-                if not self.port.tx.post(slot, length):
-                    self.port.pool.free(slot)
-
+    # seed-era thread API, now on the shared lcore-thread machinery
     def start(self) -> None:
-        self._stop.clear()
-        self._threads = [
-            threading.Thread(target=fn, daemon=True, name=name)
-            for fn, name in [
-                (self._rx_stage, "pmd-rx"),
-                (self._work_stage, "pmd-work"),
-                (self._tx_stage, "pmd-tx"),
-            ]
-        ]
-        for t in self._threads:
-            t.start()
+        self.start_lcore_threads()
 
     def stop(self) -> None:
-        self._stop.set()
-        for t in self._threads:
-            t.join(timeout=5)
-        self._threads = []
+        self.stop_lcore_threads()

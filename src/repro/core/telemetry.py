@@ -102,6 +102,69 @@ class LatencyRecorder:
         ]
 
 
+def rss_skew(per_queue_counts: List[int]) -> Dict[str, float]:
+    """RSS load-imbalance summary over per-queue packet counts.
+
+    ``max_over_mean`` is the classic imbalance factor (1.0 == perfectly
+    balanced; a queue at 2.0 is the hot queue bottlenecking core scaling);
+    ``cov`` is the coefficient of variation across queues.
+    """
+    counts = np.asarray(per_queue_counts, dtype=np.float64)
+    if counts.size == 0 or counts.sum() == 0:
+        return {"max_over_mean": 0.0, "cov": 0.0}
+    mean = counts.mean()
+    return {
+        "max_over_mean": float(counts.max() / mean),
+        "cov": float(counts.std() / mean),
+    }
+
+
+class QueueTelemetry:
+    """Per-(port, queue) RX-descriptor occupancy sampler.
+
+    Sample once per poll/scheduling round; summarizes mean and high-water
+    occupancy per queue plus the RSS skew of total per-queue traffic — the
+    observable that shows whether flows actually spread across queues
+    (paper Fig. 3(a) core scaling needs balance).
+    """
+
+    def __init__(self) -> None:
+        self._sum: Dict[tuple, int] = {}
+        self._high: Dict[tuple, int] = {}
+        self._n = 0
+
+    def sample(self, ports: List[object]) -> None:
+        self._n += 1
+        for pi, port in enumerate(ports):
+            for qi, occ in enumerate(port.queue_occupancy()):
+                key = (pi, qi)
+                self._sum[key] = self._sum.get(key, 0) + occ
+                self._high[key] = max(self._high.get(key, 0), occ)
+
+    @property
+    def samples(self) -> int:
+        return self._n
+
+    def mean_occupancy(self) -> Dict[tuple, float]:
+        return {k: v / self._n for k, v in self._sum.items()} if self._n else {}
+
+    def high_water(self) -> Dict[tuple, int]:
+        return dict(self._high)
+
+    def summary(self, ports: List[object]) -> Dict[str, float]:
+        """Flat metrics dict (RunReport.extras-shaped)."""
+        out: Dict[str, float] = {}
+        means = self.mean_occupancy()
+        for (pi, qi), m in sorted(means.items()):
+            out[f"p{pi}q{qi}_occ_mean"] = m
+            out[f"p{pi}q{qi}_occ_high"] = float(self._high[(pi, qi)])
+        for pi, port in enumerate(ports):
+            skew = rss_skew(port.rx_queue_delivered())
+            out[f"p{pi}_rss_imbalance"] = skew["max_over_mean"]
+            out[f"p{pi}_rss_cov"] = skew["cov"]
+        return out
+
+
 @dataclass
 class ThroughputMeter:
     """Counts packets/bytes over an interval → Gbps / Mpps."""

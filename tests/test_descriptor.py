@@ -1,6 +1,8 @@
 """Descriptor-ring semantics: the paper's §3.1.4 writeback-threshold fix."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.descriptor import RxDescriptorRing, TxDescriptorRing

@@ -1,6 +1,8 @@
 """Property tests for the SPSC ring and packet pool (hypothesis)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.packet import PacketPool
