@@ -1,13 +1,16 @@
-"""Shared benchmark plumbing: setup factories and CSV emission."""
+"""Shared benchmark plumbing: experiment-config builders and CSV emission.
+
+Every benchmark testbed is described by a :class:`repro.exp.ExperimentConfig`
+and built/driven by :func:`repro.exp.run_experiment` — no hand-wired
+pool/ring/server setup anywhere in ``benchmarks/``.
+"""
 from __future__ import annotations
 
-import time
 from typing import Callable, List, Optional, Tuple
 
-from repro.core import (BypassL2FwdServer, KernelStackServer, LoadGen,
-                        PacketPool, Port, TrafficPattern,
-                        find_max_sustainable_bandwidth)
-from repro.core.cost import HostCostModel
+from repro.exp import (CostConfig, ExperimentConfig, PoolConfig, PortConfig,
+                       StackConfig, TrafficConfig, make_server_factory,
+                       run_experiment)
 
 ROWS: List[str] = []
 
@@ -18,40 +21,41 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(line, flush=True)
 
 
-def make_setup(stack: str, nports: int = 1, ring: int = 1024,
-               writeback_threshold: int = 32, burst: int = 64,
-               pool_slots: int = 16384,
-               cost: Optional[HostCostModel] = None,
-               sockbuf_budget: int = 16,
-               n_queues: int = 1,
-               n_lcores: Optional[int] = None) -> Callable:
-    """Returns a fresh-state factory for MSB searches / timed runs."""
+def experiment_config(stack: str, nports: int = 1, ring: int = 1024,
+                      writeback_threshold: Optional[int] = 32, burst: int = 64,
+                      pool_slots: int = 16384,
+                      cost: Optional[CostConfig] = None,
+                      sockbuf_budget: int = 16,
+                      n_queues: int = 1,
+                      n_lcores: Optional[int] = None,
+                      traffic: Optional[TrafficConfig] = None,
+                      name: str = "bench") -> ExperimentConfig:
+    """The one place benchmark knobs map onto the declarative config tree."""
+    return ExperimentConfig(
+        name=name,
+        pool=PoolConfig(n_slots=pool_slots, slot_size=1518),
+        ports=tuple(PortConfig(n_queues=n_queues, ring_size=ring,
+                               writeback_threshold=writeback_threshold)
+                    for _ in range(nports)),
+        stack=StackConfig(kind=stack, burst_size=burst, n_lcores=n_lcores,
+                          sockbuf_budget=sockbuf_budget, cost=cost),
+        traffic=traffic if traffic is not None else TrafficConfig(),
+    )
 
-    def factory() -> Tuple[object, List[Port]]:
-        pool = PacketPool(pool_slots, 1518)
-        ports = [Port.make(pool, ring_size=ring,
-                           writeback_threshold=writeback_threshold,
-                           n_queues=n_queues)
-                 for _ in range(nports)]
-        if stack == "bypass":
-            return BypassL2FwdServer(ports, burst_size=burst,
-                                     n_lcores=n_lcores), ports
-        return KernelStackServer(ports, cost_model=cost or HostCostModel(),
-                                 sockbuf_budget=sockbuf_budget,
-                                 n_lcores=n_lcores), ports
 
-    return factory
+def make_setup(stack: str, **kw) -> Callable[[], Tuple[object, List[object]]]:
+    """Fresh-state ``() -> (server, devs)`` factory for timed runs."""
+    return make_server_factory(experiment_config(stack, **kw))
 
 
 def msb(stack: str, trial_s: float = 0.12, **kw) -> Tuple[float, float]:
-    """(max sustainable Gbps, us per packet at that rate)."""
-    f = make_setup(stack, **kw)
-    gbps, reports = find_max_sustainable_bandwidth(
-        f, trial_s=trial_s, refine_iters=4, start_gbps=0.1)
-    good = [r for r in reports if r.drop_pct == 0 and r.received > 0]
-    us_per_pkt = 0.0
-    if good:
-        best = max(good, key=lambda r: r.achieved_gbps)
-        if best.achieved_mpps > 0:
-            us_per_pkt = 1.0 / best.achieved_mpps
+    """(max sustainable Gbps, us per packet at the best sustainable rate)."""
+    cfg = experiment_config(
+        stack,
+        traffic=TrafficConfig(mode="msb", trial_s=trial_s, refine_iters=4,
+                              start_gbps=0.1),
+        **kw)
+    rep = run_experiment(cfg)
+    gbps = rep.extras.get("msb_gbps", 0.0)
+    us_per_pkt = 1.0 / rep.achieved_mpps if rep.achieved_mpps > 0 else 0.0
     return gbps, us_per_pkt

@@ -8,28 +8,31 @@ polling its own RSS-steered NIC queue.  NOTE: this container has ONE core,
 so aggregate scaling with ports/lcores is GIL-bound for both stacks; the
 per-stack RATIO and the per-queue balance are the reproduced quantities
 (see EXPERIMENTS.md).
+
+All testbeds are declared as :class:`repro.exp.ExperimentConfig` and built
+through the EthDev facade.
 """
 from __future__ import annotations
 
-import numpy as np
+from repro.exp import Testbed, TrafficConfig, run_testbed
 
-from repro.core import BypassL2FwdServer, LoadGen, PacketPool, Port
-
-from .common import emit, msb
+from .common import emit, experiment_config, msb
 
 
 def _queue_balance(n_lcores: int, n_queues: int,
                    n_packets: int = 4000) -> tuple:
     """Closed-loop run on 1 port × n_queues × n_lcores; returns
     (rss_imbalance, per-queue rx counts) for the cores×queues sweep."""
-    pool = PacketPool(16384, 1518)
-    ports = [Port.make(pool, ring_size=1024, n_queues=n_queues)]
-    server = BypassL2FwdServer(ports, burst_size=64, n_lcores=n_lcores)
-    lg = LoadGen(ports)
-    rep = lg.run_closed_loop(server, n_packets=n_packets, packet_size=512,
-                             window=256, rng=np.random.default_rng(0))
+    cfg = experiment_config(
+        "bypass", n_queues=n_queues, n_lcores=n_lcores,
+        traffic=TrafficConfig(mode="closed_loop", n_packets=n_packets,
+                              packet_size=512, window=256, payload_seed=0),
+        name=f"fig3a-balance-{n_lcores}x{n_queues}")
+    tb = Testbed.build(cfg)
+    rep = run_testbed(tb)
     assert rep.received == n_packets, "balance run must conserve packets"
-    per_queue = [s.rx_packets for _, s in sorted(server.per_queue_stats().items())]
+    per_queue = [s.rx_packets
+                 for _, s in sorted(tb.server.per_queue_stats().items())]
     imb = rep.extras.get("p0_rss_imbalance", 1.0)
     return imb, per_queue
 

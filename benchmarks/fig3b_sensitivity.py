@@ -7,40 +7,42 @@ strongly (+32.5% from frequency alone) while DPDK barely moves (+1.2%).
 Host-parameter mapping (DESIGN.md §2 — the modeled costs are exactly the
 gem5-timed kernel events; real code is not modeled):
 
-  3GHz CPU        → HostCostModel.with_freq(3.0): all syscall/IRQ cycles shrink
+  3GHz CPU        → CostConfig(cpu_ghz=3.0): all syscall/IRQ cycles shrink
   low-lat PCIe    → interrupt_cycles halved (IRQ delivery path)
   2x sockbuf      → read() drains 32 packets per syscall (socket buffer/LSQ)
   2x ring         → descriptor rings doubled (more buffering)
   2x burst        → PMD burst 64→128 (DPDK-side knob; kernel stack unaffected)
 
-Each upgrade is cumulative on top of the previous, like the paper.
+Each upgrade is cumulative on top of the previous, like the paper.  Every
+step is a declarative config delta (`dataclasses.replace` on frozen
+:class:`repro.exp.CostConfig`), not a hand-built testbed.
 """
 from __future__ import annotations
 
 from dataclasses import replace
 
-from repro.core.cost import HostCostModel
+from repro.exp import CostConfig
 
 from .common import emit, msb
 
 
 def run(trial_s: float = 0.12) -> dict:
-    base_cost = HostCostModel(cpu_ghz=2.0)
+    base_cost = CostConfig(cpu_ghz=2.0)
     steps = [
         ("base_2ghz", dict(cost=base_cost, ring=1024, burst=64,
                            sockbuf_budget=16)),
-        ("3ghz_cpu", dict(cost=base_cost.with_freq(3.0), ring=1024, burst=64,
-                          sockbuf_budget=16)),
-        ("low_lat_pcie", dict(cost=replace(base_cost.with_freq(3.0),
+        ("3ghz_cpu", dict(cost=replace(base_cost, cpu_ghz=3.0), ring=1024,
+                          burst=64, sockbuf_budget=16)),
+        ("low_lat_pcie", dict(cost=replace(base_cost, cpu_ghz=3.0,
                                            interrupt_cycles=4000),
                               ring=1024, burst=64, sockbuf_budget=16)),
-        ("2x_sockbuf", dict(cost=replace(base_cost.with_freq(3.0),
+        ("2x_sockbuf", dict(cost=replace(base_cost, cpu_ghz=3.0,
                                          interrupt_cycles=4000),
                             ring=1024, burst=64, sockbuf_budget=32)),
-        ("2x_ring", dict(cost=replace(base_cost.with_freq(3.0),
+        ("2x_ring", dict(cost=replace(base_cost, cpu_ghz=3.0,
                                       interrupt_cycles=4000),
                          ring=2048, burst=64, sockbuf_budget=32)),
-        ("2x_burst", dict(cost=replace(base_cost.with_freq(3.0),
+        ("2x_burst", dict(cost=replace(base_cost, cpu_ghz=3.0,
                                        interrupt_cycles=4000),
                           ring=2048, burst=128, sockbuf_budget=32)),
     ]

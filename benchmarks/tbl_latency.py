@@ -2,24 +2,25 @@
 
 Mean / median / std / p95 / p99 / p99.9 / max latency and drop % for both
 stacks at fixed offered loads — the 'statistics file' the paper's loadgen
-produces.
+produces.  Each (stack, rate) cell is one declarative open-loop experiment.
 """
 from __future__ import annotations
 
-from repro.core import LoadGen, TrafficPattern
+from repro.exp import TrafficConfig, run_experiment
 
-from .common import emit, make_setup
+from .common import emit, experiment_config
 
 
 def run(duration_s: float = 0.15) -> dict:
     out = {}
     for stack in ("bypass", "kernel"):
         for rate in (0.25, 0.5, 1.0):
-            server, ports = make_setup(stack)()
-            lg = LoadGen(ports)
-            rep = lg.run(server, TrafficPattern(rate_gbps=rate,
-                                                packet_size=1518),
-                         duration_s=duration_s)
+            cfg = experiment_config(
+                stack,
+                traffic=TrafficConfig(mode="open_loop", rate_gbps=rate,
+                                      packet_size=1518, duration_s=duration_s),
+                name=f"tbl-latency-{stack}-{rate}")
+            rep = run_experiment(cfg)
             s = rep.latency
             if s is None:
                 continue

@@ -3,7 +3,8 @@
 Reproduces the §4.2 correctness experiment ("we modify L2Fwd to print the
 content of the packets ... we always receive the correct content") as a
 checksum sweep over packet sizes and port counts, then runs the run-to-
-completion and pipeline execution models side by side.
+completion and pipeline execution models side by side.  Every testbed is a
+declarative :class:`repro.exp.ExperimentConfig`.
 
     PYTHONPATH=src python examples/l2fwd_forward.py
 """
@@ -12,22 +13,23 @@ import time
 
 sys.path.insert(0, "src")
 
-import numpy as np
-
-from repro.core import (BypassL2FwdServer, LoadGen, PacketPool, PipelineServer,
-                        Port, TrafficPattern)
+from repro.exp import (ExperimentConfig, PoolConfig, PortConfig, StackConfig,
+                       TrafficConfig, Testbed, run_experiment, run_testbed)
 
 
 def main():
     print("=== L2Fwd payload integrity (paper §4.2) ===")
     for size in (64, 256, 1024, 1518):
         for nports in (1, 2, 4):
-            pool = PacketPool(4096, 1518)
-            ports = [Port.make(pool) for _ in range(nports)]
-            server = BypassL2FwdServer(ports, burst_size=32)
-            lg = LoadGen(ports, verify_integrity=True)
-            rep = lg.run_closed_loop(server, n_packets=500, packet_size=size,
-                                     rng=np.random.default_rng(size))
+            cfg = ExperimentConfig(
+                name=f"l2fwd-integrity-{size}B-{nports}p",
+                pool=PoolConfig(n_slots=4096),
+                ports=tuple(PortConfig(ring_size=256) for _ in range(nports)),
+                stack=StackConfig(kind="bypass", burst_size=32),
+                traffic=TrafficConfig(mode="closed_loop", n_packets=500,
+                                      packet_size=size, verify_integrity=True,
+                                      payload_seed=size))
+            rep = run_experiment(cfg)
             ok = (rep.received == 500 and rep.extras["integrity_errors"] == 0)
             print(f"  size={size:5d} ports={nports}: rx={rep.received} "
                   f"integrity_errors={int(rep.extras['integrity_errors'])} "
@@ -35,30 +37,30 @@ def main():
             assert ok
 
     print("\n=== Run-to-completion vs pipeline mode (paper §2) ===")
-    pool = PacketPool(8192, 1518)
-    ports = [Port.make(pool, ring_size=1024)]
-    rtc = BypassL2FwdServer(ports, burst_size=64)
-    rep = LoadGen(ports).run(rtc, TrafficPattern(rate_gbps=0.5,
-                                                 packet_size=1518),
-                             duration_s=0.2)
+    base = ExperimentConfig(
+        name="l2fwd-rtc",
+        pool=PoolConfig(n_slots=8192),
+        ports=(PortConfig(ring_size=1024),),
+        stack=StackConfig(kind="bypass", burst_size=64),
+        traffic=TrafficConfig(mode="open_loop", rate_gbps=0.5,
+                              packet_size=1518, duration_s=0.2))
+    rep = run_experiment(base)
     print(f"  run-to-completion: {rep.achieved_gbps:.2f} Gbps, "
           f"p99={rep.latency.p99_ns/1e3:.0f}us")
 
-    pool2 = PacketPool(8192, 1518)
-    ports2 = [Port.make(pool2, ring_size=1024)]
-    pipe = PipelineServer(ports2[0], burst_size=64)
-    pipe.start()
-    lg2 = LoadGen(ports2)
+    tb = Testbed.build(base.with_stack(kind="pipeline"))
+    tb.server.start()  # the three stage lcores run in their own threads
 
     class _PipeShim:  # loadgen drives polling; pipeline threads do the work
         def poll_once(self):
             time.sleep(0)
             return 0
 
-    rep2 = lg2.run(_PipeShim(), TrafficPattern(rate_gbps=0.5,
-                                               packet_size=1518),
-                   duration_s=0.2)
-    pipe.stop()
+    from repro.core import TrafficPattern
+    rep2 = tb.loadgen.run(_PipeShim(), TrafficPattern(rate_gbps=0.5,
+                                                      packet_size=1518),
+                          duration_s=0.2)
+    tb.server.stop()
     print(f"  pipeline (3 threads): {rep2.achieved_gbps:.2f} Gbps, "
           f"rx={rep2.received} (GIL-serialized on this 1-core host; "
           f"see DESIGN.md)")

@@ -2,31 +2,36 @@
 
 One port with 4 RX/TX queue pairs; Toeplitz RSS steers each of 256 synthetic
 flows to a queue; 4 lcores each poll their own queue run-to-completion.  The
-sequential round-robin scheduler makes the single-core measurement exactly
-reproducible; per-queue stats and the RSS skew come out of the run report.
+testbed is declared as an :class:`repro.exp.ExperimentConfig`; per-queue
+counters come out both as the server's stats and as DPDK-named
+``rx_q{N}_packets`` extended stats from the :class:`repro.core.EthDev`
+facade.
 
     PYTHONPATH=src python examples/multiqueue_rss.py
 """
 import sys
+import time
 
 sys.path.insert(0, "src")
 
-import numpy as np
-
-from repro.core import (BurstPlan, BypassL2FwdServer, LoadGen, PacketPool,
-                        Port, QueueTelemetry, TrafficPattern)
+from repro.exp import (ExperimentConfig, PortConfig, StackConfig,
+                       TrafficConfig, Testbed, run_testbed)
 
 
 def main():
     print("=== 1 port x 4 RSS queues x 4 lcores (closed loop) ===")
-    pool = PacketPool(16384, 1518)
-    ports = [Port.make(pool, ring_size=1024, n_queues=4)]
-    server = BypassL2FwdServer(ports, burst_size=64, n_lcores=4)
-    lg = LoadGen(ports, verify_integrity=True)
-    rep = lg.run_closed_loop(server, n_packets=4000, packet_size=512,
-                             rng=np.random.default_rng(0))
+    cfg = ExperimentConfig(
+        name="multiqueue-rss",
+        ports=(PortConfig(n_queues=4, ring_size=1024),),
+        stack=StackConfig(kind="bypass", burst_size=64, n_lcores=4),
+        traffic=TrafficConfig(mode="closed_loop", n_packets=4000,
+                              packet_size=512, verify_integrity=True,
+                              payload_seed=0))
+    tb = Testbed.build(cfg)
+    rep = run_testbed(tb)
     print(f"  sent={rep.sent} rx={rep.received} drops={rep.dropped} "
           f"integrity_errors={int(rep.extras['integrity_errors'])}")
+    server = tb.server
     for (pi, qi), st in sorted(server.per_queue_stats().items()):
         print(f"  port{pi} queue{qi}: rx={st.rx_packets} tx={st.tx_packets} "
               f"avg_burst={st.avg_burst:.1f}")
@@ -36,28 +41,34 @@ def main():
           f"{sum(s.rx_packets for s in server.per_queue_stats().values()) == agg.rx_packets})")
     print(f"  rss_imbalance={rep.extras['p0_rss_imbalance']:.3f} "
           f"(1.0 == perfectly balanced)")
+    dev = tb.devs[0]
+    xs = dev.xstats()
+    print("  ethdev xstats: "
+          + " ".join(f"rx_q{q}_packets={xs[f'rx_q{q}_packets']}"
+                     for q in range(4))
+          + f" imissed={xs['imissed']}")
 
     print("\n=== per-lcore BurstPlan (heterogeneous DCA depths) ===")
-    pool2 = PacketPool(16384, 1518)
-    ports2 = [Port.make(pool2, ring_size=1024, n_queues=4)]
-    server2 = BypassL2FwdServer(ports2, n_lcores=4,
-                                plan=BurstPlan(per_lcore=(8, 16, 32, 64)))
+    cfg2 = ExperimentConfig(
+        name="multiqueue-burstplan",
+        ports=(PortConfig(n_queues=4, ring_size=1024),),
+        stack=StackConfig(kind="bypass", n_lcores=4,
+                          per_lcore_bursts=(8, 16, 32, 64)))
+    tb2 = Testbed.build(cfg2)
+    server2, lg2, dev2 = tb2.server, tb2.loadgen, tb2.devs[0]
     print("  lcore bursts:", [lc.burst_size for lc in server2.lcores])
     # drive manually so queue occupancy can be sampled mid-run
-    telem = QueueTelemetry()
-    lg2 = LoadGen(ports2)
-    import time
     for i in range(400):
         now = time.perf_counter_ns()
-        lg2._send_burst(ports2[0], 32, 512, now)
-        ports2[0].flush_rx()
-        telem.sample(ports2)  # post-DMA, pre-processing: the DCA pressure point
+        lg2._send_burst(dev2, 32, 512, now)
+        dev2.flush_rx()
+        tb2.telemetry.sample(tb2.devs)  # post-DMA, pre-processing: DCA pressure
         server2.poll_once()
-        lg2._drain_port(ports2[0], time.perf_counter_ns())
+        lg2._drain_port(dev2, time.perf_counter_ns())
     rep2 = lg2._report(offered_gbps=0.0)
     print(f"  rx={rep2.received} drops={rep2.dropped} "
-          f"({telem.samples} occupancy samples)")
-    for k, v in telem.summary(ports2).items():
+          f"({tb2.telemetry.samples} occupancy samples)")
+    for k, v in tb2.telemetry.summary(tb2.devs).items():
         print(f"  {k}={v:.3f}")
 
 

@@ -1,8 +1,10 @@
 """Quickstart: the paper's kernel-bypass dataplane in 60 seconds.
 
-Builds both network stacks, measures their max sustainable bandwidth with the
-EtherLoadGen-analogue load generator, and shows the descriptor-writeback-
-threshold fix (paper §3.1.4) in action.
+Declares both network stacks as :class:`repro.exp.ExperimentConfig`, measures
+their max sustainable bandwidth with the EtherLoadGen-analogue load generator
+through the one-call :func:`repro.exp.run_experiment` entry point, and shows
+the descriptor-writeback-threshold fix (paper §3.1.4) through the
+``rte_ethdev``-style :class:`repro.core.EthDev` API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,44 +12,39 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import (BypassL2FwdServer, KernelStackServer, LoadGen,
-                        PacketPool, Port, RxDescriptorRing, TrafficPattern,
-                        find_max_sustainable_bandwidth)
+from repro.core import EthDev, PacketPool
+from repro.exp import ExperimentConfig, StackConfig, TrafficConfig, run_experiment
 
 
-def make(stack, nports=1):
-    pool = PacketPool(16384, 1518)
-    ports = [Port.make(pool, ring_size=1024) for _ in range(nports)]
-    server = (BypassL2FwdServer(ports, burst_size=64) if stack == "bypass"
-              else KernelStackServer(ports))
-    return server, ports
+def config(stack: str, **traffic) -> ExperimentConfig:
+    return ExperimentConfig(name=f"quickstart-{stack}",
+                            stack=StackConfig(kind=stack),
+                            traffic=TrafficConfig(**traffic))
 
 
 def main():
     print("=== 1. Maximum sustainable bandwidth (EtherLoadGen ramp mode) ===")
     for stack in ("kernel", "bypass"):
-        msb, _ = find_max_sustainable_bandwidth(lambda: make(stack),
-                                                trial_s=0.1, refine_iters=3)
-        print(f"  {stack:7s} stack: {msb:6.2f} Gbps")
+        rep = run_experiment(config(stack, mode="msb", trial_s=0.1,
+                                    refine_iters=3))
+        print(f"  {stack:7s} stack: {rep.extras['msb_gbps']:6.2f} Gbps")
 
     print("\n=== 2. Per-packet latency at a common offered load ===")
     for stack in ("kernel", "bypass"):
-        server, ports = make(stack)
-        rep = LoadGen(ports).run(
-            server, TrafficPattern(rate_gbps=0.5, packet_size=1518),
-            duration_s=0.2)
+        rep = run_experiment(config(stack, mode="open_loop", rate_gbps=0.5,
+                                    packet_size=1518, duration_s=0.2))
         print(f"  {stack:7s}: {rep.latency}")
 
     print("\n=== 3. Descriptor writeback threshold (paper §3.1.4) ===")
     for threshold in (None, 32):
-        ring = RxDescriptorRing(256, writeback_threshold=threshold)
         pool = PacketPool(256, 256)
+        dev = EthDev.make(pool, ring_size=256, writeback_threshold=threshold)
         visible_at = None
         for i in range(256):
             s = pool.alloc()
             pool.write_packet(s, seq=i, length=128, fill=0)
-            ring.nic_deliver(s, 128)
-            if visible_at is None and ring.poll(1):
+            dev.deliver(s, 128)
+            if visible_at is None and len(dev.rx_burst(0, 1)[0]):
                 visible_at = i + 1
         name = "pathological (None)" if threshold is None else f"fixed ({threshold})"
         print(f"  threshold {name:20s}: first packet visible to the PMD "

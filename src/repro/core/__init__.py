@@ -4,6 +4,7 @@ from .cost import HostCostModel, ZERO_COST, spin_ns
 from .dataplane import BypassDataplane, FeedStats, KernelStackFeed, make_feed
 from .dca import BurstPlan, OccupancyTrace, run_burst_experiment
 from .descriptor import RxDescriptorRing, TxDescriptorRing, STATUS_DONE, STATUS_FREE
+from .ethdev import EthConf, EthDev, EthDevError, EthDevState, EthStats
 from .kernel_stack import KernelStackServer, KernelStats
 from .loadgen import LoadGen, TrafficPattern, find_max_sustainable_bandwidth
 from .netstack import Lcore, NetworkStack, ServerStats
@@ -21,6 +22,7 @@ from .packet import (
     flow_tuple_for_id,
     payload_checksum,
     read_flow,
+    read_flow_bytes,
     read_flow_bytes_vec,
     read_seq,
     read_seqs_vec,
@@ -41,7 +43,8 @@ from .telemetry import (LatencyRecorder, LatencyStats, QueueTelemetry,
                         RunReport, ThroughputMeter, rss_skew)
 
 __all__ = [
-    "BypassDataplane", "BypassL2FwdServer", "BurstPlan", "FeedStats",
+    "BypassDataplane", "BypassL2FwdServer", "BurstPlan", "EthConf", "EthDev",
+    "EthDevError", "EthDevState", "EthStats", "FeedStats",
     "HostCostModel", "KernelStackFeed", "KernelStackServer", "KernelStats",
     "LatencyRecorder", "LatencyStats", "Lcore", "LoadGen", "NetworkStack",
     "OccupancyTrace", "PacketPool", "PacketRef", "PipelineServer", "Port",
@@ -50,7 +53,8 @@ __all__ = [
     "TxDescriptorRing", "ZERO_COST",
     "checksum", "find_max_sustainable_bandwidth", "flow_bytes",
     "flow_tuple_for_id", "make_feed", "payload_checksum", "read_flow",
-    "read_flow_bytes_vec", "read_seq", "read_stamp", "rss_skew",
+    "read_flow_bytes", "read_flow_bytes_vec", "read_seq", "read_stamp",
+    "rss_skew",
     "run_burst_experiment", "spin_ns", "stamp", "swap_macs",
     "toeplitz_hash", "toeplitz_hash_vec", "write_flow", "write_flow_ids_vec",
     "write_seq",

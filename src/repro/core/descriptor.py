@@ -53,6 +53,7 @@ class RxDescriptorRing:
         self._cached = 0  # completions sitting in the descriptor cache
         # stats
         self.delivered = 0
+        self.delivered_bytes = 0
         self.dropped = 0
         self.writebacks = 0  # number of writeback *events* (DMA bursts)
         self.writeback_sizes: List[int] = []  # burst size of each writeback
@@ -82,6 +83,7 @@ class RxDescriptorRing:
         self.head += 1
         self._cached += 1
         self.delivered += 1
+        self.delivered_bytes += int(length)
         if self._cached >= self._effective_threshold() or self.in_flight >= self.size:
             self._writeback()
         return True
@@ -102,6 +104,7 @@ class RxDescriptorRing:
             self.head += take
             self._cached += take
             self.delivered += take
+            self.delivered_bytes += int(lengths[:take].sum())
         self.dropped += n - take
         if self._cached >= self._effective_threshold() or self.in_flight >= self.size:
             self._writeback()
@@ -183,8 +186,10 @@ class TxDescriptorRing:
         self.head = 0  # driver cursor (next post)
         self.tail = 0  # NIC cursor (next transmit)
         self.posted = 0
+        self.posted_bytes = 0
         self.rejected = 0
         self.transmitted = 0
+        self.transmitted_bytes = 0
 
     @property
     def pending(self) -> int:
@@ -199,6 +204,7 @@ class TxDescriptorRing:
         self.lengths[idx] = length
         self.head += 1
         self.posted += 1
+        self.posted_bytes += int(length)
         return True
 
     def post_burst(self, items: List[Tuple[int, int]]) -> int:
@@ -220,6 +226,7 @@ class TxDescriptorRing:
             self.lengths[idx] = lengths[:take]
             self.head += take
             self.posted += take
+            self.posted_bytes += int(lengths[:take].sum())
         self.rejected += n - take
         return take
 
@@ -232,6 +239,7 @@ class TxDescriptorRing:
             self.slots[idx] = -1
             self.tail += 1
             self.transmitted += 1
+            self.transmitted_bytes += int(self.lengths[idx])
         return out
 
     def drain_burst(self, max_n: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -245,4 +253,5 @@ class TxDescriptorRing:
         self.slots[idx] = -1
         self.tail += take
         self.transmitted += take
+        self.transmitted_bytes += int(lengths.sum())
         return slots, lengths

@@ -270,6 +270,16 @@ def read_flow_bytes_vec(pool: PacketPool, slots: np.ndarray) -> np.ndarray:
     return pool.arena[slots, FLOW_OFFSET : FLOW_OFFSET + FLOW_SIZE]
 
 
+def read_flow_bytes(pool: PacketPool, slot: int) -> np.ndarray:
+    """(12,) flow-tuple bytes of one packet, as a zero-copy view.
+
+    The scalar sibling of :func:`read_flow_bytes_vec`: basic slicing of the
+    arena row allocates no array data, which is what the single-packet
+    delivery hot path (:meth:`repro.core.pmd.Port.deliver`) needs.
+    """
+    return pool.arena[slot, FLOW_OFFSET : FLOW_OFFSET + FLOW_SIZE]
+
+
 def swap_macs_vec(pool: PacketPool, slots: np.ndarray,
                   lengths: Optional[np.ndarray] = None) -> None:
     """L2Fwd header rewrite for a whole burst in one vectorized op."""

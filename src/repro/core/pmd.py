@@ -30,7 +30,8 @@ import numpy as np
 
 from .descriptor import RxDescriptorRing, TxDescriptorRing
 from .netstack import Lcore, NetworkStack, ServerStats
-from .packet import PacketPool, read_flow_bytes_vec, swap_macs, swap_macs_vec
+from .packet import (PacketPool, read_flow_bytes, read_flow_bytes_vec,
+                     swap_macs, swap_macs_vec)
 from .rings import SpscRing
 from .rss import RssIndirection
 
@@ -44,7 +45,14 @@ _EMPTY_I32 = np.empty(0, dtype=np.int32)
 
 class Port:
     """One NIC port: ``n_queues`` RX/TX descriptor-ring pairs + RSS steering
-    over a shared packet pool."""
+    over a shared packet pool.
+
+    .. deprecated:: the public device API is :class:`repro.core.ethdev.EthDev`
+       (the ``rte_ethdev``-faithful facade, which owns a ``Port`` as its
+       internal engine).  Direct ``Port``/``Port.make`` construction remains
+       supported for existing code and tests, but new scenarios should go
+       through ``EthDev`` / ``repro.exp.ExperimentConfig``.
+    """
 
     def __init__(
         self,
@@ -84,6 +92,18 @@ class Port:
     def n_queues(self) -> int:
         return len(self.rx_queues)
 
+    # -- burst dataplane (the rte_ethdev contract; EthDev delegates here) ----
+    def rx_burst(self, queue_id: int, nb_pkts: int) -> Tuple[np.ndarray, np.ndarray]:
+        """``rte_eth_rx_burst`` semantics: harvest up to ``nb_pkts`` completed
+        descriptors from one RX queue → (slots, lengths), zero copy."""
+        return self.rx_queues[queue_id].poll_burst(nb_pkts)
+
+    def tx_burst(self, queue_id: int, slots: np.ndarray,
+                 lengths: np.ndarray) -> int:
+        """``rte_eth_tx_burst`` semantics: post a burst on one TX queue;
+        returns the number accepted (the rest is the caller's to free)."""
+        return self.tx_queues[queue_id].post_burst_vec(slots, lengths)
+
     # -- legacy single-queue views (the seed-era API; queue 0) ---------------
     @property
     def rx(self) -> RxDescriptorRing:
@@ -100,8 +120,9 @@ class Port:
         if self.n_queues == 1:
             q = 0
         else:
-            q = self.rss.steer_one(read_flow_bytes_vec(
-                self.pool, np.array([packet_slot])))
+            # scalar path: a zero-copy flow-bytes view + table-lookup hash —
+            # no per-frame numpy temporaries
+            q = self.rss.steer_one(read_flow_bytes(self.pool, packet_slot))
         if not self.rx_queues[q].nic_deliver(packet_slot, length):
             self.pool.free(packet_slot)
             return False
@@ -222,7 +243,8 @@ class BypassL2FwdServer(NetworkStack):
     def _service_queue(self, lcore: Lcore, port_idx: int, queue_idx: int,
                        qstats: ServerStats) -> int:
         port = self.ports[port_idx]
-        slots, lengths = port.rx_queues[queue_idx].poll_burst(lcore.burst_size)
+        # the DPDK loop iteration, verbatim: rx_burst → process → tx_burst
+        slots, lengths = port.rx_burst(queue_idx, lcore.burst_size)
         qstats.poll_iterations += 1
         n = len(slots)
         if n == 0:
@@ -234,7 +256,7 @@ class BypassL2FwdServer(NetworkStack):
         else:
             for slot, length in zip(slots, lengths):
                 self.process_fn(port.pool.view(int(slot), int(length)))
-        posted = port.tx_queues[queue_idx].post_burst_vec(slots, lengths)
+        posted = port.tx_burst(queue_idx, slots, lengths)
         if posted < n:
             port.pool.free_burst([int(s) for s in slots[posted:]])  # TX full: drop
         qstats.rx_packets += n

@@ -22,7 +22,7 @@ published Microsoft test vectors (see ``tests/test_rss.py``).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -60,7 +60,30 @@ def _key_windows(key: bytes, n_input_bits: int) -> np.ndarray:
     return out
 
 
+def _key_byte_tables(windows: np.ndarray) -> List[List[int]]:
+    """Per-(byte position, byte value) XOR contributions to the Toeplitz hash.
+
+    tables[p][v] == XOR of the key windows for the set bits of value ``v`` at
+    byte position ``p``.  With these, hashing one 12-byte tuple is 12 plain
+    list lookups — no numpy temporaries, which is what the single-packet
+    delivery hot path needs (burst paths keep the vectorized route).
+    """
+    tables: List[List[int]] = []
+    for p in range(len(windows) // 8):
+        w = windows[p * 8 : (p + 1) * 8]
+        row = [0] * 256
+        for v in range(256):
+            h = 0
+            for bit in range(8):
+                if v & (0x80 >> bit):
+                    h ^= int(w[bit])
+            row[v] = h
+        tables.append(row)
+    return tables
+
+
 _WINDOWS = _key_windows(DEFAULT_RSS_KEY, FLOW_TUPLE_BYTES * 8)
+_BYTE_TABLES = _key_byte_tables(_WINDOWS)
 
 
 def _hash_with_windows(flow_bytes: np.ndarray, windows: np.ndarray) -> np.ndarray:
@@ -112,15 +135,37 @@ class RssIndirection:
         # key windows precomputed once — steering is on the per-burst hot path
         self._windows = (_WINDOWS if key is None
                          else _key_windows(key, FLOW_TUPLE_BYTES * 8))
+        # per-byte lookup tables for the scalar (single-packet) path
+        self._byte_tables = (_BYTE_TABLES if key is None
+                             else _key_byte_tables(self._windows))
         self.table = (np.arange(table_size) % n_queues).astype(np.int32)
+        self._table_list: List[int] = self.table.tolist()
 
     def steer(self, flow_bytes: np.ndarray) -> np.ndarray:
         """Map a burst of (N, 12) flow tuples to (N,) queue indices."""
         hashes = _hash_with_windows(flow_bytes, self._windows)
         return self.table[hashes % np.uint32(len(self.table))]
 
+    def hash_one(self, flow_bytes: np.ndarray) -> int:
+        """Scalar Toeplitz hash of one 12-byte flow tuple.
+
+        Allocation-free: 12 table lookups, for the per-frame delivery path
+        (:meth:`repro.core.pmd.Port.deliver`).  Matches
+        :func:`toeplitz_hash_vec` bit for bit.
+        """
+        if len(flow_bytes) != FLOW_TUPLE_BYTES:
+            raise ValueError(f"flow tuple must be {FLOW_TUPLE_BYTES} bytes")
+        tables = self._byte_tables
+        h = 0
+        for p in range(FLOW_TUPLE_BYTES):
+            h ^= tables[p][flow_bytes[p]]
+        return h
+
     def steer_one(self, flow_bytes: np.ndarray) -> int:
-        return int(self.steer(flow_bytes.reshape(1, -1))[0])
+        """Scalar steering: one 12-byte flow tuple → queue index, without the
+        per-packet numpy temporaries of the burst path."""
+        fb = flow_bytes.reshape(-1) if flow_bytes.ndim > 1 else flow_bytes
+        return self._table_list[self.hash_one(fb) % len(self._table_list)]
 
     def rebalance(self, entries: Sequence[int]) -> None:
         """Reprogram the indirection table (driver-style rebalancing)."""
@@ -130,3 +175,4 @@ class RssIndirection:
         if (table < 0).any() or (table >= self.n_queues).any():
             raise ValueError("table entries must name valid queues")
         self.table = table.copy()
+        self._table_list = self.table.tolist()

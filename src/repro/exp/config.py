@@ -1,0 +1,266 @@
+"""Frozen, declarative experiment configs — the orchestration contract.
+
+Every testbed this repo can build (pool → EthDevs → server stack → load
+generator → telemetry) is described by one :class:`ExperimentConfig`: a tree
+of frozen dataclasses that round-trips losslessly through plain dicts
+(``cfg == ExperimentConfig.from_dict(cfg.to_dict())``), so experiments can be
+stored as JSON, diffed, swept programmatically, and reproduced exactly —
+the SimBricks/gem5-stdlib lesson applied to this repo.
+
+The configs are *pure data*: nothing here imports the dataplane.  Building
+live objects from a config is :mod:`repro.exp.testbed`'s job; running one is
+:func:`repro.exp.runner.run_experiment`'s.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field, fields, replace
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.cost import HostCostModel
+from repro.core.packet import DEFAULT_MTU, DEFAULT_TS_OFFSET
+from repro.core.rss import DEFAULT_TABLE_SIZE
+
+TRAFFIC_MODES = ("open_loop", "closed_loop", "msb")
+
+
+def _plain(value: Any) -> Any:
+    """Recursively convert a config value to JSON-safe plain data."""
+    if hasattr(value, "to_dict"):
+        return value.to_dict()
+    if isinstance(value, tuple):
+        return [_plain(v) for v in value]
+    return value
+
+
+def _config_to_dict(cfg: Any) -> Dict[str, Any]:
+    return {f.name: _plain(getattr(cfg, f.name)) for f in fields(cfg)}
+
+
+@dataclass(frozen=True)
+class PoolConfig:
+    """The packet arena (DPDK mempool / pinned hugepages analogue)."""
+
+    n_slots: int = 16384
+    slot_size: int = DEFAULT_MTU
+
+    def __post_init__(self) -> None:
+        if self.n_slots < 1 or self.slot_size < 64:
+            raise ValueError("pool needs >= 1 slot of >= 64 bytes")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _config_to_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "PoolConfig":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class RssConfig:
+    """RSS steering: indirection-table size + optional key override.
+
+    The key is carried as a hex string so configs stay JSON-safe; ``None``
+    means the Microsoft default key.
+    """
+
+    table_size: int = DEFAULT_TABLE_SIZE
+    key_hex: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        if self.key_hex is not None:
+            if len(bytes.fromhex(self.key_hex)) < 16:
+                raise ValueError("RSS key must be at least 16 bytes")
+
+    @property
+    def key(self) -> Optional[bytes]:
+        return None if self.key_hex is None else bytes.fromhex(self.key_hex)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _config_to_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "RssConfig":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class PortConfig:
+    """One NIC device: queue count, per-queue ring size, writeback threshold
+    (the paper's §3.1.4 parameter), RSS."""
+
+    n_queues: int = 1
+    ring_size: int = 1024
+    writeback_threshold: Optional[int] = 32
+    rss: RssConfig = field(default_factory=RssConfig)
+
+    def __post_init__(self) -> None:
+        if self.n_queues < 1:
+            raise ValueError("n_queues must be >= 1")
+        if self.ring_size < 1:
+            raise ValueError("ring_size must be >= 1")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _config_to_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "PortConfig":
+        d = dict(d)
+        d["rss"] = RssConfig.from_dict(d.get("rss", {}))
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class CostConfig:
+    """Kernel-stack host-cost model (mirrors
+    :class:`repro.core.cost.HostCostModel`); the Fig. 3(b) knobs."""
+
+    cpu_ghz: float = 2.0
+    interrupt_cycles: int = 8000
+    syscall_cycles: int = 1400
+    per_packet_kernel_cycles: int = 2500
+
+    def to_host_cost_model(self) -> HostCostModel:
+        return HostCostModel(**asdict(self))
+
+    @classmethod
+    def from_host_cost_model(cls, m: HostCostModel) -> "CostConfig":
+        return cls(cpu_ghz=m.cpu_ghz, interrupt_cycles=m.interrupt_cycles,
+                   syscall_cycles=m.syscall_cycles,
+                   per_packet_kernel_cycles=m.per_packet_kernel_cycles)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _config_to_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "CostConfig":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class StackConfig:
+    """Which server stack processes packets, and its knobs.
+
+    ``kind`` selects from the stack registry (:mod:`repro.exp.testbed`):
+    ``bypass`` (run-to-completion DPDK L2Fwd), ``pipeline`` (rx→work→tx stage
+    lcores), ``kernel`` (the interrupt-driven baseline), or any kind a
+    scenario registered via :func:`repro.exp.register_stack`.  Kind names are
+    resolved at build time so configs stay pure data.
+    """
+
+    kind: str = "bypass"
+    burst_size: int = 64
+    n_lcores: Optional[int] = None           # None == one lcore per queue
+    per_lcore_bursts: Optional[Tuple[int, ...]] = None  # BurstPlan override
+    sockbuf_budget: int = 16                 # kernel stack: pkts per read()
+    stage_ring_capacity: int = 1024          # pipeline stack: SPSC ring depth
+    cost: Optional[CostConfig] = None        # kernel stack: modeled host costs
+
+    def __post_init__(self) -> None:
+        if self.burst_size < 1:
+            raise ValueError("burst_size must be >= 1")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _config_to_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "StackConfig":
+        d = dict(d)
+        if d.get("cost") is not None:
+            d["cost"] = CostConfig.from_dict(d["cost"])
+        if d.get("per_lcore_bursts") is not None:
+            d["per_lcore_bursts"] = tuple(d["per_lcore_bursts"])
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class TrafficConfig:
+    """What the load generator offers, and how the run is driven.
+
+    Modes:
+
+    * ``open_loop`` — paced offered load (``rate_gbps``/``kind``) for
+      ``duration_s``; the EtherLoadGen measurement mode.
+    * ``closed_loop`` — exactly ``n_packets`` with ``window`` in flight;
+      deterministic, the conservation-test mode.
+    * ``msb`` — the bandwidth-test mode: ramp + bisect to the maximum
+      sustainable bandwidth (``start_gbps``/``max_gbps``/``trial_s``/
+      ``refine_iters``/``drop_tolerance_pct``).
+    """
+
+    mode: str = "open_loop"
+    packet_size: int = 1518
+    # open_loop
+    rate_gbps: float = 1.0
+    kind: str = "uniform"                    # uniform | poisson | bursty
+    burst_len: int = 32
+    duration_s: float = 0.25
+    drain_timeout_s: float = 0.5
+    seed: int = 0
+    # closed_loop
+    n_packets: int = 1000
+    window: int = 32
+    payload_seed: Optional[int] = None       # rng-filled payloads when set
+    # msb
+    start_gbps: float = 0.25
+    max_gbps: float = 400.0
+    trial_s: float = 0.2
+    refine_iters: int = 5
+    drop_tolerance_pct: float = 0.0
+    # loadgen knobs (all modes)
+    n_flows: int = 256
+    ts_offset: int = DEFAULT_TS_OFFSET
+    verify_integrity: bool = False
+    max_tx_burst: int = 64
+
+    def __post_init__(self) -> None:
+        if self.mode not in TRAFFIC_MODES:
+            raise ValueError(f"traffic mode must be one of {TRAFFIC_MODES}")
+        if self.packet_size < 64:
+            raise ValueError("packet_size must be >= 64 (MIN_FRAME)")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _config_to_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "TrafficConfig":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class ExperimentConfig:
+    """One complete, reproducible experiment: pool + devices + stack +
+    traffic.  ``from_dict(to_dict())`` round-trips exactly."""
+
+    name: str = "experiment"
+    pool: PoolConfig = field(default_factory=PoolConfig)
+    ports: Tuple[PortConfig, ...] = (PortConfig(),)
+    stack: StackConfig = field(default_factory=StackConfig)
+    traffic: TrafficConfig = field(default_factory=TrafficConfig)
+
+    def __post_init__(self) -> None:
+        if not self.ports:
+            raise ValueError("need at least one port")
+        if self.stack.kind == "pipeline" and len(self.ports) != 1:
+            raise ValueError("the pipeline stack drives exactly one port")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _config_to_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ExperimentConfig":
+        d = dict(d)
+        d["pool"] = PoolConfig.from_dict(d.get("pool", {}))
+        d["ports"] = tuple(PortConfig.from_dict(p) for p in d.get("ports", [{}]))
+        d["stack"] = StackConfig.from_dict(d.get("stack", {}))
+        d["traffic"] = TrafficConfig.from_dict(d.get("traffic", {}))
+        return cls(**d)
+
+    # replace() helpers keep sweep code terse: cfg.with_traffic(rate_gbps=2.0)
+    def with_stack(self, **kw: Any) -> "ExperimentConfig":
+        return replace(self, stack=replace(self.stack, **kw))
+
+    def with_traffic(self, **kw: Any) -> "ExperimentConfig":
+        return replace(self, traffic=replace(self.traffic, **kw))
+
+    def with_ports(self, **kw: Any) -> "ExperimentConfig":
+        return replace(self, ports=tuple(replace(p, **kw) for p in self.ports))

@@ -1,0 +1,80 @@
+"""``run_experiment(cfg) -> RunReport`` — the single entry point.
+
+Every paper benchmark and example drives the dataplane through this function
+(or through a :class:`~repro.exp.testbed.Testbed` it built itself when it
+needs mid-run access to the server).  The traffic mode selects the drive:
+
+* ``closed_loop`` — deterministic n-packet conservation run;
+* ``open_loop``   — paced offered load for a fixed duration;
+* ``msb``         — EtherLoadGen bandwidth-test mode (fresh testbed per
+  trial, so no state leaks between rates), reporting the best sustainable
+  trial with ``extras["msb_gbps"]``.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+from repro.core import (EthDev, NetworkStack, RunReport, TrafficPattern,
+                        find_max_sustainable_bandwidth)
+
+from .config import ExperimentConfig
+from .testbed import Testbed
+
+
+def make_server_factory(
+    cfg: ExperimentConfig,
+) -> Callable[[], Tuple[NetworkStack, List[EthDev]]]:
+    """Fresh-state ``() -> (server, devs)`` factory — what MSB searches and
+    repeated-trial sweeps need (every call builds a brand-new testbed)."""
+
+    def factory() -> Tuple[NetworkStack, List[EthDev]]:
+        tb = Testbed.build(cfg)
+        return tb.server, tb.devs
+
+    return factory
+
+
+def run_testbed(tb: Testbed) -> RunReport:
+    """Drive an already-built testbed per its config's traffic mode
+    (``closed_loop`` or ``open_loop``; ``msb`` needs fresh testbeds per trial
+    — use :func:`run_experiment`)."""
+    t = tb.cfg.traffic
+    if t.mode == "closed_loop":
+        rng = (np.random.default_rng(t.payload_seed)
+               if t.payload_seed is not None else None)
+        return tb.loadgen.run_closed_loop(
+            tb.server, n_packets=t.n_packets, packet_size=t.packet_size,
+            window=t.window, rng=rng)
+    if t.mode == "open_loop":
+        pattern = TrafficPattern(rate_gbps=t.rate_gbps,
+                                 packet_size=t.packet_size, kind=t.kind,
+                                 burst_len=t.burst_len, seed=t.seed)
+        return tb.loadgen.run(tb.server, pattern, duration_s=t.duration_s,
+                              drain_timeout_s=t.drain_timeout_s)
+    raise ValueError(f"run_testbed cannot drive traffic mode {t.mode!r}")
+
+
+def run_experiment(cfg: ExperimentConfig) -> RunReport:
+    """Build + run one experiment from config alone."""
+    t = cfg.traffic
+    if t.mode in ("closed_loop", "open_loop"):
+        return run_testbed(Testbed.build(cfg))
+    # msb: ramp + bisect over fresh testbeds
+    gbps, reports = find_max_sustainable_bandwidth(
+        make_server_factory(cfg),
+        packet_size=t.packet_size,
+        start_gbps=t.start_gbps,
+        max_gbps=t.max_gbps,
+        trial_s=t.trial_s,
+        drop_tolerance_pct=t.drop_tolerance_pct,
+        refine_iters=t.refine_iters,
+        pattern_kind=t.kind,
+    )
+    good = [r for r in reports
+            if r.drop_pct <= t.drop_tolerance_pct and r.received > 0]
+    rep = max(good, key=lambda r: r.achieved_gbps) if good else RunReport()
+    rep.extras["msb_gbps"] = gbps
+    rep.extras["msb_trials"] = float(len(reports))
+    return rep

@@ -1,0 +1,264 @@
+"""EthDev: rte_ethdev lifecycle state machine, burst dataplane gating, and
+DPDK-named stats/xstats parity with the legacy Port counters."""
+import numpy as np
+import pytest
+
+from repro.core import (BypassL2FwdServer, EthConf, EthDev, EthDevError,
+                        EthDevState, LoadGen, PacketPool)
+
+
+def _dev(n_queues=2, ring=64, pool_slots=1024):
+    return EthDev.make(PacketPool(pool_slots, 1518), ring_size=ring,
+                       n_queues=n_queues)
+
+
+# -- lifecycle state machine --------------------------------------------------
+
+def test_lifecycle_happy_path():
+    dev = EthDev(PacketPool(256, 1518))
+    assert dev.state is EthDevState.UNCONFIGURED
+    dev.configure(EthConf(n_rx_queues=2, n_tx_queues=2))
+    assert dev.state is EthDevState.CONFIGURED
+    for q in range(2):
+        dev.rx_queue_setup(q, 64)
+        dev.tx_queue_setup(q, 64)
+    dev.dev_start()
+    assert dev.state is EthDevState.STARTED
+    dev.dev_stop()
+    assert dev.state is EthDevState.STOPPED
+    dev.dev_start()  # restart without reconfiguring (DPDK allows it)
+    assert dev.state is EthDevState.STARTED
+
+
+def test_illegal_transitions_raise():
+    pool = PacketPool(256, 1518)
+    dev = EthDev(pool)
+    # dataplane / start / queue setup before configure
+    with pytest.raises(EthDevError):
+        dev.dev_start()
+    with pytest.raises(EthDevError):
+        dev.rx_queue_setup(0, 64)
+    with pytest.raises(EthDevError):
+        dev.rx_burst(0, 32)
+    with pytest.raises(EthDevError):
+        dev.dev_stop()
+    dev.configure(EthConf())
+    # start with unset queues
+    with pytest.raises(EthDevError):
+        dev.dev_start()
+    dev.rx_queue_setup(0, 64)
+    dev.tx_queue_setup(0, 64)
+    dev.dev_start()
+    # configure/queue-setup/start while running
+    with pytest.raises(EthDevError):
+        dev.configure(EthConf())
+    with pytest.raises(EthDevError):
+        dev.rx_queue_setup(0, 64)
+    with pytest.raises(EthDevError):
+        dev.tx_queue_setup(0, 64)
+    with pytest.raises(EthDevError):
+        dev.dev_start()
+    # stop twice
+    dev.dev_stop()
+    with pytest.raises(EthDevError):
+        dev.dev_stop()
+
+
+def test_dataplane_gated_on_started():
+    dev = _dev()
+    dev.dev_stop()
+    with pytest.raises(EthDevError):
+        dev.rx_burst(0, 32)
+    with pytest.raises(EthDevError):
+        dev.tx_burst(0, np.array([0]), np.array([64]))
+    with pytest.raises(EthDevError):
+        dev.deliver(0, 64)
+    with pytest.raises(EthDevError):
+        _ = dev.port
+    dev.dev_start()
+    slots, lengths = dev.rx_burst(0, 32)
+    assert len(slots) == 0 and len(lengths) == 0
+
+
+def test_reconfigure_after_stop_wipes_queues():
+    dev = _dev(n_queues=2)
+    dev.dev_stop()
+    dev.configure(EthConf(n_rx_queues=4, n_tx_queues=4))
+    assert dev.state is EthDevState.CONFIGURED
+    assert dev.n_queues == 4
+    # old queue setups are gone: starting now must fail until re-setup
+    with pytest.raises(EthDevError):
+        dev.dev_start()
+    for q in range(4):
+        dev.rx_queue_setup(q, 32)
+        dev.tx_queue_setup(q, 32)
+    dev.dev_start()
+    assert len(dev.rx_queues) == 4
+
+
+def test_queue_setup_bounds():
+    dev = EthDev(PacketPool(256, 1518)).configure(
+        EthConf(n_rx_queues=2, n_tx_queues=2))
+    with pytest.raises(EthDevError):
+        dev.rx_queue_setup(2, 64)      # queue id out of range
+    with pytest.raises(EthDevError):
+        dev.rx_queue_setup(-1, 64)
+    with pytest.raises(EthDevError):
+        dev.tx_queue_setup(5, 64)
+    with pytest.raises(EthDevError):
+        dev.rx_queue_setup(0, 0)       # nb_desc must be >= 1
+    dev.rx_queue_setup(1, 64)          # in-range ids are fine
+    dev.tx_queue_setup(0, 64)
+
+
+def test_ethconf_validation():
+    with pytest.raises(ValueError):
+        EthConf(n_rx_queues=0)
+    with pytest.raises(ValueError):
+        EthConf(n_rx_queues=2, n_tx_queues=4)
+
+
+# -- burst dataplane ----------------------------------------------------------
+
+def test_rx_tx_burst_roundtrip():
+    """Wire deliver → rx_burst → tx_burst → drain: the DPDK loop by hand."""
+    dev = _dev(n_queues=1, ring=64)
+    pool = dev.pool
+    for i in range(8):
+        s = pool.alloc()
+        pool.write_packet(s, seq=i, length=128, fill=0)
+        assert dev.deliver(s, 128)
+    dev.flush_rx()
+    slots, lengths = dev.rx_burst(0, 64)
+    assert len(slots) == 8
+    assert dev.tx_burst(0, slots, lengths) == 8
+    drained, dlens = dev.drain_tx_bursts(64)
+    assert len(drained) == 8
+    assert (np.sort(drained) == np.sort(slots)).all()
+
+
+def test_counters_persist_across_stop_start():
+    dev = _dev(n_queues=1, ring=64)
+    pool = dev.pool
+    s = pool.alloc()
+    pool.write_packet(s, seq=0, length=128, fill=0)
+    dev.deliver(s, 128)
+    dev.dev_stop()
+    dev.dev_start()
+    assert dev.stats().ipackets == 1  # hardware counters survive stop/start
+
+
+def test_queue_resetup_after_stop_takes_effect_on_restart():
+    """DPDK semantics: a queue re-setup done while STOPPED replaces the ring
+    the dataplane uses after the next dev_start."""
+    dev = _dev(n_queues=2, ring=64)
+    dev.dev_stop()
+    dev.rx_queue_setup(0, 128)
+    dev.tx_queue_setup(1, 32)
+    dev.dev_start()
+    assert dev.rx_queues[0].size == 128
+    assert dev.rx_queues[1].size == 64      # untouched queue keeps its ring
+    assert dev.tx_queues[1].size == 32
+
+
+def test_rss_rebalance_persists_across_stop_start():
+    dev = _dev(n_queues=4)
+    dev.rss.rebalance([2] * 128)
+    dev.dev_stop()
+    dev.dev_start()
+    assert (dev.rss.table == 2).all()
+
+
+# -- stats / xstats -----------------------------------------------------------
+
+def _run_traffic(n_queues=4, n_packets=1200):
+    pool = PacketPool(4096, 1518)
+    dev = EthDev.make(pool, ring_size=256, n_queues=n_queues)
+    server = BypassL2FwdServer([dev], burst_size=32, n_lcores=n_queues)
+    lg = LoadGen([dev])
+    lg.run_closed_loop(server, n_packets=n_packets, packet_size=256)
+    return dev
+
+
+def test_xstats_parity_with_legacy_counters():
+    """Satellite acceptance: xstats sums equal Port.rx_delivered /
+    rx_dropped / tx_posted exactly."""
+    dev = _run_traffic()
+    xs = dev.xstats()
+    port = dev.port
+    n_q = dev.n_queues
+    assert sum(xs[f"rx_q{q}_packets"] for q in range(n_q)) == port.rx_delivered
+    assert sum(xs[f"rx_q{q}_errors"] for q in range(n_q)) == port.rx_dropped
+    assert sum(xs[f"tx_q{q}_packets"] for q in range(n_q)) == port.tx_posted
+    assert xs["rx_good_packets"] == port.rx_delivered
+    assert xs["imissed"] == port.rx_dropped
+    assert xs["rx_nombuf"] == dev.pool.alloc_failures
+
+
+def test_stats_aggregate_block():
+    dev = _run_traffic(n_queues=2, n_packets=800)
+    st = dev.stats()
+    assert st.ipackets == 800
+    assert st.opackets == 800
+    assert st.ibytes == 800 * 256
+    assert st.obytes == 800 * 256
+    assert st.imissed == 0 and st.oerrors == 0 and st.rx_nombuf == 0
+    assert st.as_dict()["ipackets"] == 800
+
+
+def test_imissed_counts_ring_overflow_drops():
+    """Frames the NIC drops for want of descriptors land in imissed and in
+    rx_q*_errors, never in rx_q*_packets."""
+    pool = PacketPool(512, 1518)
+    dev = EthDev.make(pool, ring_size=8, writeback_threshold=8, n_queues=1)
+    delivered = 0
+    for i in range(32):  # nobody polls: ring fills at 8
+        s = pool.alloc()
+        pool.write_packet(s, seq=i, length=128, fill=0)
+        if dev.deliver(s, 128):
+            delivered += 1
+    st = dev.stats()
+    assert delivered == 8
+    assert st.ipackets == 8
+    assert st.imissed == 32 - 8
+    xs = dev.xstats()
+    assert xs["rx_q0_packets"] == 8 and xs["rx_q0_errors"] == 24
+
+
+def test_stats_reset():
+    dev = _run_traffic(n_queues=2, n_packets=400)
+    assert dev.stats().ipackets == 400
+    dev.stats_reset()
+    st = dev.stats()
+    assert st.ipackets == 0 and st.opackets == 0
+    assert st.ibytes == 0 and st.obytes == 0
+    assert all(v == 0 for v in dev.xstats().values())
+
+
+def test_rx_nombuf_resets_against_shared_pool_baseline():
+    """The mempool is pool-scoped and may be shared; stats_reset restarts
+    this device's view of alloc failures."""
+    pool = PacketPool(4, 1518)
+    dev = EthDev.make(pool, ring_size=8, writeback_threshold=8, n_queues=1)
+    for _ in range(6):
+        pool.alloc()  # 4 succeed, 2 fail
+    assert dev.stats().rx_nombuf == 2
+    dev.stats_reset()
+    assert dev.stats().rx_nombuf == 0
+    pool.alloc()  # one more failure after the reset
+    assert dev.stats().rx_nombuf == 1
+
+
+def test_ethdev_is_dropin_for_port_in_server_and_loadgen():
+    """The whole point of the facade: servers + LoadGen take EthDevs."""
+    pool = PacketPool(4096, 1518)
+    devs = [EthDev.make(pool, ring_size=256, n_queues=2, dev_id=i)
+            for i in range(2)]
+    server = BypassL2FwdServer(devs, burst_size=32)
+    lg = LoadGen(devs, verify_integrity=True)
+    rep = lg.run_closed_loop(server, n_packets=600, packet_size=200,
+                             rng=np.random.default_rng(0))
+    assert rep.received == 600
+    assert rep.dropped == 0
+    assert rep.extras["integrity_errors"] == 0
+    assert sum(d.stats().ipackets for d in devs) == 600

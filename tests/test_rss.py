@@ -68,6 +68,28 @@ def test_flow_affinity():
     assert len(set(int(q) for q in qs)) == 1
 
 
+def test_scalar_steer_one_matches_vectorized():
+    """The allocation-free single-packet path (table-lookup Toeplitz) must
+    agree with the vectorized burst path bit for bit — default key, custom
+    key, and after a rebalance."""
+    rng = np.random.default_rng(11)
+    flows = rng.integers(0, 256, size=(512, 12), dtype=np.uint8)
+    for key in (None, bytes(rng.integers(0, 256, size=40, dtype=np.uint8))):
+        rss = RssIndirection(4, key=key)
+        vec = rss.steer(flows)
+        for i in range(len(flows)):
+            assert rss.steer_one(flows[i]) == int(vec[i])
+            assert rss.hash_one(flows[i]) == int(
+                toeplitz_hash_vec(flows[i].reshape(1, -1), key=key)[0])
+        # (1, 12)-shaped input (the legacy calling convention) still works
+        assert rss.steer_one(flows[0].reshape(1, -1)) == int(vec[0])
+    rss = RssIndirection(4)
+    rss.rebalance([3] * 128)
+    assert all(rss.steer_one(flows[i]) == 3 for i in range(16))
+    with pytest.raises(ValueError):
+        rss.hash_one(flows[0][:8])  # not a 12-byte tuple
+
+
 def test_indirection_rebalance():
     rss = RssIndirection(4)
     rss.rebalance([0] * 128)  # pin everything to queue 0
