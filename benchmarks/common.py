@@ -48,7 +48,7 @@ def make_setup(stack: str, **kw) -> Callable[[], Tuple[object, List[object]]]:
     return make_server_factory(experiment_config(stack, **kw))
 
 
-def msb(stack: str, trial_s: float = 0.12, **kw) -> Tuple[float, float]:
+def msb(stack: str, trial_s: float = 0.004, **kw) -> Tuple[float, float]:
     """(max sustainable Gbps, us per packet at the best sustainable rate)."""
     cfg = experiment_config(
         stack,

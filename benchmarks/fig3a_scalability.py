@@ -37,7 +37,7 @@ def _queue_balance(n_lcores: int, n_queues: int,
     return imb, per_queue
 
 
-def run(trial_s: float = 0.12) -> dict:
+def run(trial_s: float = 0.004) -> dict:
     out = {}
     # -- port-count axis (the seed sweep) ------------------------------------
     for nports in (1, 2, 3, 4):

@@ -26,7 +26,7 @@ from repro.exp import CostConfig
 from .common import emit, msb
 
 
-def run(trial_s: float = 0.12) -> dict:
+def run(trial_s: float = 0.004) -> dict:
     base_cost = CostConfig(cpu_ghz=2.0)
     steps = [
         ("base_2ghz", dict(cost=base_cost, ring=1024, burst=64,

@@ -7,7 +7,9 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=["fig3a", "fig3b", "fig4", "latency", "kernels",
                              "roofline"])
-    ap.add_argument("--trial-s", type=float, default=0.12)
+    # VIRTUAL seconds per MSB trial since the SimClock refactor: a few ms of
+    # simulated traffic is statistically plenty and runs fast at any rate
+    ap.add_argument("--trial-s", type=float, default=0.004)
     args = ap.parse_args()
 
     from . import (fig3a_scalability, fig3b_sensitivity, fig4_dca_burst,

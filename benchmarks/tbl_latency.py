@@ -11,7 +11,7 @@ from repro.exp import TrafficConfig, run_experiment
 from .common import emit, experiment_config
 
 
-def run(duration_s: float = 0.15) -> dict:
+def run(duration_s: float = 0.05) -> dict:
     out = {}
     for stack in ("bypass", "kernel"):
         for rate in (0.25, 0.5, 1.0):

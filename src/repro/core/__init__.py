@@ -38,19 +38,20 @@ from .packet import (
 )
 from .pmd import BypassL2FwdServer, PipelineServer, Port
 from .rings import SpscRing
+from .simclock import EventScheduler, SimClock, Wire
 from .rss import DEFAULT_RSS_KEY, RssIndirection, toeplitz_hash, toeplitz_hash_vec
 from .telemetry import (LatencyRecorder, LatencyStats, QueueTelemetry,
                         RunReport, ThroughputMeter, rss_skew)
 
 __all__ = [
     "BypassDataplane", "BypassL2FwdServer", "BurstPlan", "EthConf", "EthDev",
-    "EthDevError", "EthDevState", "EthStats", "FeedStats",
+    "EthDevError", "EthDevState", "EthStats", "EventScheduler", "FeedStats",
     "HostCostModel", "KernelStackFeed", "KernelStackServer", "KernelStats",
     "LatencyRecorder", "LatencyStats", "Lcore", "LoadGen", "NetworkStack",
     "OccupancyTrace", "PacketPool", "PacketRef", "PipelineServer", "Port",
     "QueueTelemetry", "RssIndirection", "RunReport", "RxDescriptorRing",
-    "ServerStats", "SpscRing", "ThroughputMeter", "TrafficPattern",
-    "TxDescriptorRing", "ZERO_COST",
+    "ServerStats", "SimClock", "SpscRing", "ThroughputMeter", "TrafficPattern",
+    "TxDescriptorRing", "Wire", "ZERO_COST",
     "checksum", "find_max_sustainable_bandwidth", "flow_bytes",
     "flow_tuple_for_id", "make_feed", "payload_checksum", "read_flow",
     "read_flow_bytes", "read_flow_bytes_vec", "read_seq", "read_stamp",

@@ -91,18 +91,25 @@ def run_burst_experiment(
     arrival_chunk: int = 64,
     process_cost_fn: Optional[Callable[[np.ndarray], None]] = None,
     packet_size: int = 1024,
+    clock: Optional["SimClock"] = None,
+    tick_ns: int = 1_000,
 ) -> Tuple[OccupancyTrace, "np.ndarray"]:
     """Reproduce the Fig. 4 setup: deliver ``n_packets`` in a short interval,
     process them in ``burst_size`` chunks, trace occupancy + per-packet delay.
 
-    Returns (occupancy trace, per-packet queue delay in poll-iterations).
+    Runs on a :class:`~repro.core.simclock.SimClock` (one service round ==
+    ``tick_ns`` of virtual time); pass an existing clock to compose with a
+    larger virtual-time experiment.  Returns (occupancy trace, per-packet
+    queue delay in virtual ns).
     """
     from .descriptor import RxDescriptorRing
     from .packet import PacketPool, swap_macs
+    from .simclock import SimClock
 
     pool = PacketPool(ring_size, packet_size)
     ring = RxDescriptorRing(ring_size, writeback_threshold=writeback_threshold)
     process = process_cost_fn or swap_macs
+    clock = clock if clock is not None else SimClock()
 
     trace = OccupancyTrace(capacity=ring_size)
     enqueue_tick = np.full(n_packets, -1, dtype=np.int64)
@@ -110,14 +117,13 @@ def run_burst_experiment(
 
     delivered = 0
     processed = 0
-    tick = 0
     # Service capacity per tick covers the arrival rate (and a whole burst
     # once one is ready) for every configuration — the paper's Fig. 4
     # asymmetry is about WHEN processing starts (overlapped small bursts vs.
     # accumulate-then-forward), not about a slower server.
     service_per_tick = max(arrival_chunk, burst_size)
     while processed < n_packets:
-        tick += 1
+        tick = clock.advance(tick_ns)
         # Arrival process: the whole train arrives "in a short time interval"
         # — arrival_chunk packets per tick.
         for _ in range(arrival_chunk):

@@ -65,6 +65,10 @@ class EthConf:
     n_tx_queues: int = 1
     rss_key: Optional[bytes] = None          # None == the Microsoft default key
     rss_table_size: int = DEFAULT_TABLE_SIZE
+    # wire parameters (virtual-time mode): serialization rate of the attached
+    # link (<= 0 == ideal wire, the legacy behaviour) + one-way propagation
+    link_gbps: float = 0.0
+    link_latency_ns: int = 0
 
     def __post_init__(self) -> None:
         if self.n_rx_queues < 1 or self.n_tx_queues < 1:
@@ -72,6 +76,8 @@ class EthConf:
         if self.n_rx_queues != self.n_tx_queues:
             # the Port engine pairs RX/TX queues one-to-one
             raise ValueError("n_rx_queues must equal n_tx_queues")
+        if self.link_latency_ns < 0:
+            raise ValueError("link_latency_ns must be >= 0")
 
 
 @dataclass(frozen=True)
@@ -196,8 +202,11 @@ class EthDev:
         # Re-assemble the engine from the current rings every start, so a
         # queue re-setup done while STOPPED takes effect on the next start
         # (DPDK semantics).  Counters persist because the rings persist.
+        assert self._conf is not None
         self._port = Port(self.pool, self._rx_rings, self._tx_rings,
-                          rss=self._rss)
+                          rss=self._rss,
+                          link_gbps=self._conf.link_gbps,
+                          link_latency_ns=self._conf.link_latency_ns)
         self._state = EthDevState.STARTED
         return self
 
@@ -313,6 +322,14 @@ class EthDev:
         return self._conf.n_rx_queues
 
     @property
+    def link_gbps(self) -> float:
+        return self._conf.link_gbps if self._conf is not None else 0.0
+
+    @property
+    def link_latency_ns(self) -> int:
+        return self._conf.link_latency_ns if self._conf is not None else 0
+
+    @property
     def rx_queues(self) -> List[RxDescriptorRing]:
         return self._started_port().rx_queues
 
@@ -375,12 +392,15 @@ class EthDev:
         rss_key: Optional[bytes] = None,
         rss_table_size: int = DEFAULT_TABLE_SIZE,
         dev_id: int = 0,
+        link_gbps: float = 0.0,
+        link_latency_ns: int = 0,
     ) -> "EthDev":
         """configure + set up every queue + start, in one call (the shape
         every DPDK example's ``port_init()`` takes)."""
         dev = cls(pool, dev_id=dev_id).configure(EthConf(
             n_rx_queues=n_queues, n_tx_queues=n_queues,
-            rss_key=rss_key, rss_table_size=rss_table_size))
+            rss_key=rss_key, rss_table_size=rss_table_size,
+            link_gbps=link_gbps, link_latency_ns=link_latency_ns))
         for q in range(n_queues):
             dev.rx_queue_setup(q, ring_size, writeback_threshold=writeback_threshold)
             dev.tx_queue_setup(q, ring_size)

@@ -30,7 +30,7 @@ from typing import Deque, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .cost import HostCostModel, spin_ns
+from .cost import HostCostModel
 from .netstack import Lcore, NetworkStack, ServerStats
 from .packet import swap_macs
 from .pmd import Port, ProcessFn
@@ -43,6 +43,7 @@ class KernelStats(ServerStats):
     copies: int = 0
     copied_bytes: int = 0
     allocs: int = 0
+    sockdrops: int = 0  # skbs dropped on socket-buffer overflow (rmem cap)
 
 
 class KernelStackServer(NetworkStack):
@@ -63,10 +64,14 @@ class KernelStackServer(NetworkStack):
         sockbuf_budget: int = 16,  # packets drained per read() syscall
         process_fn: Optional[ProcessFn] = None,
         n_lcores: Optional[int] = None,
+        sockbuf_capacity: int = 512,  # rmem cap: skbs queued per socket
     ):
         super().__init__(ports, n_lcores=n_lcores)
+        if sockbuf_capacity < 1:
+            raise ValueError("sockbuf_capacity must be >= 1")
         self.cost = cost_model or HostCostModel()
         self.sockbuf_budget = sockbuf_budget
+        self.sockbuf_capacity = sockbuf_capacity
         self.process_fn = process_fn if process_fn is not None else swap_macs
         # socket receive queues (skbs waiting for the app), one per HW queue
         self._sock_queues: Dict[Tuple[int, int], Deque[np.ndarray]] = {
@@ -83,16 +88,22 @@ class KernelStackServer(NetworkStack):
         if not batch:
             return 0
         qstats.interrupts += 1
-        spin_ns(self.cost.ns(self.cost.interrupt_cycles))
+        self.charge_ns(self.cost.ns(self.cost.interrupt_cycles))
         q = self._sock_queues[(port_idx, queue_idx)]
         for slot, length in batch:
+            if len(q) >= self.sockbuf_capacity:
+                # socket buffer full (the rmem cap): the kernel drops the
+                # frame — the loss mechanism a saturated iperf actually sees
+                port.pool.free(slot)
+                qstats.sockdrops += 1
+                continue
             # copy 1: NIC DMA buffer -> fresh skb (real alloc + real copy)
             skb = np.array(port.pool.view(slot, length))  # allocates + copies
             qstats.allocs += 1
             qstats.copies += 1
             qstats.copied_bytes += length
             port.pool.free(slot)  # NIC buffer recycled immediately (kernel owns skb)
-            spin_ns(self.cost.ns(self.cost.per_packet_kernel_cycles))
+            self.charge_ns(self.cost.ns(self.cost.per_packet_kernel_cycles))
             q.append(skb)
         return len(batch)
 
@@ -105,7 +116,7 @@ class KernelStackServer(NetworkStack):
             return 0
         # read() syscall: drains up to sockbuf_budget skbs into user buffers
         qstats.syscalls += 1
-        spin_ns(self.cost.ns(self.cost.syscall_cycles))
+        self.charge_ns(self.cost.ns(self.cost.syscall_cycles))
         n = min(self.sockbuf_budget, len(q))
         done = 0
         for _ in range(n):
@@ -118,7 +129,7 @@ class KernelStackServer(NetworkStack):
             self.process_fn(user_buf)
             # sendto() syscall per packet + copy 3: user buffer -> NIC TX buffer
             qstats.syscalls += 1
-            spin_ns(self.cost.ns(self.cost.syscall_cycles))
+            self.charge_ns(self.cost.ns(self.cost.syscall_cycles))
             tx_slot = port.pool.alloc()
             if tx_slot is None:
                 continue  # pool exhausted: drop on TX
@@ -127,7 +138,7 @@ class KernelStackServer(NetworkStack):
             port.pool.lengths[tx_slot] = length
             qstats.copies += 1
             qstats.copied_bytes += length
-            spin_ns(self.cost.ns(self.cost.per_packet_kernel_cycles))
+            self.charge_ns(self.cost.ns(self.cost.per_packet_kernel_cycles))
             if port.tx_queues[queue_idx].post(tx_slot, length):
                 qstats.tx_packets += 1
             else:

@@ -15,11 +15,30 @@ This class implements all of the above against in-process servers
 the wire side: it DMAs frames into RX descriptor rings and drains TX rings.
 Like its hardware counterpart, the generator itself never drops or delays
 packets — all loss is attributable to the system under test (ring overflow /
-pool exhaustion), which is what "maximum sustainable bandwidth" measures.
+pool exhaustion / link saturation), which is what "maximum sustainable
+bandwidth" measures.
+
+Timing comes in two modes:
+
+* **Virtual time** (:meth:`LoadGen.run_sim`, the default through
+  :mod:`repro.exp`): packet emission times are computed *analytically* from
+  the :class:`TrafficPattern` (uniform spacing, pre-drawn exponential
+  inter-arrivals for Poisson, burst trains, trace replay) and a
+  :class:`~repro.core.simclock.SimClock` advances event-by-event — the
+  paper's "compares the timestamp with the current tick" semantics.  Results
+  are deterministic and independent of host speed: 400 Gbps of offered load
+  simulates fine on a laptop.  Frames cross a :class:`~repro.core.simclock.
+  Wire` per direction, so RTTs include per-link serialization
+  (``bytes*8/link_gbps``) and propagation latency.
+
+* **Wall clock** (:meth:`LoadGen.run`): the same analytic schedule is paced
+  against ``time.perf_counter_ns()`` — kept for host-overhead studies where
+  the real Python execution cost *is* the measurement.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Protocol, Sequence, Tuple
 
@@ -43,7 +62,10 @@ from .packet import (
     write_packets_vec,
 )
 from .pmd import Port
+from .simclock import SimClock, Wire
 from .telemetry import LatencyRecorder, RunReport, ThroughputMeter, rss_skew
+
+TRAFFIC_KINDS = ("uniform", "poisson", "bursty")
 
 
 class Server(Protocol):
@@ -52,7 +74,18 @@ class Server(Protocol):
 
 @dataclass(frozen=True)
 class TrafficPattern:
-    """Static traffic description (rate/size/pattern), or trace replay."""
+    """Static traffic description (rate/size/pattern), or trace replay.
+
+    ``kind``:
+
+    * ``uniform`` — constant inter-arrival ``1/pps``;
+    * ``poisson`` — pre-drawn i.i.d. exponential inter-arrivals with mean
+      ``1/pps`` (a true Poisson process; the seed implementation re-drew
+      ``rng.poisson(cumulative_target)`` each iteration, which is
+      non-monotonic in expectation and has the wrong marginal distribution);
+    * ``bursty`` — back-to-back trains of ``burst_len`` packets, trains
+      spaced so the long-run rate matches ``rate_gbps``.
+    """
 
     rate_gbps: float = 1.0
     packet_size: int = 1518
@@ -64,6 +97,62 @@ class TrafficPattern:
     def packets_per_second(self) -> float:
         return self.rate_gbps * 1e9 / 8.0 / self.packet_size
 
+    def emission_schedule(
+        self, duration_ns: int, rng: Optional[np.random.Generator] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Analytic per-packet emission times for one run.
+
+        Returns ``(times_ns int64, sizes int32)``, times non-decreasing and
+        ``< duration_ns`` (bursty trains may start before the cutoff and
+        finish their train).  Fully determined by the pattern + rng state, so
+        two runs with the same seed emit identical schedules — the root of
+        run-to-run determinism.
+
+        The schedule is materialized up front (12 bytes/packet): high-rate
+        runs should use short simulated durations — a 1 ms window at
+        400 Gbps/64B is ~780k packets.  Chunked/streaming schedules for
+        multi-minute trace replays are a ROADMAP item.
+        """
+        empty = (np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int32))
+        if self.trace is not None:
+            entries = [(int(t), max(MIN_FRAME, int(s)))
+                       for t, s in self.trace if int(t) < duration_ns]
+            if not entries:
+                return empty
+            times = np.array([t for t, _ in entries], dtype=np.int64)
+            sizes = np.array([s for _, s in entries], dtype=np.int32)
+            return times, sizes
+        pps = self.packets_per_second()
+        if pps <= 0 or duration_ns <= 0:
+            return empty
+        gap_ns = 1e9 / pps
+        if self.kind == "uniform":
+            n = int(duration_ns * 1e-9 * pps)
+            times = (np.arange(n, dtype=np.float64) * gap_ns).astype(np.int64)
+        elif self.kind == "poisson":
+            rng = rng if rng is not None else np.random.default_rng(self.seed)
+            chunks: List[np.ndarray] = []
+            last = 0.0
+            block = max(64, int(duration_ns * 1e-9 * pps) + 64)
+            while last < duration_ns:
+                cum = np.cumsum(rng.exponential(gap_ns, size=block)) + last
+                chunks.append(cum)
+                last = float(cum[-1])
+            cat = np.concatenate(chunks)
+            times = cat[cat < duration_ns].astype(np.int64)
+        elif self.kind == "bursty":
+            train_gap = gap_ns * self.burst_len
+            n_trains = max(1, int(np.ceil(duration_ns / train_gap)))
+            starts = (np.arange(n_trains, dtype=np.float64) * train_gap)
+            starts = starts[starts < duration_ns]
+            times = np.repeat(starts.astype(np.int64), self.burst_len)
+        else:
+            raise ValueError(
+                f"unknown traffic kind {self.kind!r}; expected one of "
+                f"{TRAFFIC_KINDS}")
+        sizes = np.full(len(times), self.packet_size, dtype=np.int32)
+        return times, sizes
+
 
 @dataclass
 class _Flight:
@@ -71,6 +160,12 @@ class _Flight:
     received: int = 0
     integrity_errors: int = 0
     checksums: dict = field(default_factory=dict)
+
+
+def _port_wire(port: Port) -> Wire:
+    """One direction of the port's attached link (ideal if unconfigured)."""
+    return Wire(gbps=getattr(port, "link_gbps", 0.0),
+                latency_ns=getattr(port, "link_latency_ns", 0))
 
 
 class LoadGen:
@@ -108,6 +203,23 @@ class LoadGen:
         self._next_seq = 0
 
     # -- wire-side primitives ------------------------------------------------
+    def _write_frame(self, port: Port, slot: int, size: int, stamp_ns: int,
+                     rng: Optional[np.random.Generator]) -> int:
+        """Fill one allocated slot: seq, timestamp, flow tuple, checksum."""
+        seq = self._next_seq
+        self._next_seq += 1
+        port.pool.write_packet(
+            slot, seq=seq, length=size, ts_offset=self.ts_offset,
+            timestamp_ns=stamp_ns, fill=(seq & 0xFF) if rng is None else None,
+            rng=rng,
+        )
+        write_flow(port.pool.arena[slot], *flow_tuple_for_id(seq % self.n_flows))
+        if self.verify_integrity:
+            self.flight.checksums[seq] = payload_checksum(
+                port.pool.view(slot, size), self.ts_offset
+            )
+        return seq
+
     def _send_one(self, port: Port, size: int, now_ns: int,
                   rng: Optional[np.random.Generator]) -> bool:
         slot = port.pool.alloc()
@@ -115,17 +227,7 @@ class LoadGen:
             # Generator out of buffers == system not recycling fast enough.
             self.flight.sent += 1
             return False
-        seq = self._next_seq
-        self._next_seq += 1
-        port.pool.write_packet(
-            slot, seq=seq, length=size, ts_offset=self.ts_offset,
-            timestamp_ns=now_ns, fill=(seq & 0xFF) if rng is None else None, rng=rng,
-        )
-        write_flow(port.pool.arena[slot], *flow_tuple_for_id(seq % self.n_flows))
-        if self.verify_integrity:
-            self.flight.checksums[seq] = payload_checksum(
-                port.pool.view(slot, size), self.ts_offset
-            )
+        self._write_frame(port, slot, size, now_ns, rng)
         self.flight.sent += 1
         # RSS steers the frame to a queue; ring overflow → drop at the NIC
         # (the Port recycles the buffer)
@@ -147,18 +249,26 @@ class LoadGen:
         # overflow drops at the NIC (the Port recycles those buffers)
         return port.deliver_burst(slots_arr, lengths)
 
-    def _drain_port(self, port: Port, now_ns: int) -> int:
+    def _drain_port(self, port: Port, now_ns: int,
+                    back_wire: Optional[Wire] = None) -> int:
         """Collect forwarded packets from every TX queue; timestamp-compare
-        for RTT."""
+        for RTT.  With ``back_wire`` (virtual time), every frame pays the
+        return link's serialization + latency before its RTT is recorded."""
         if not self.verify_integrity:
             slots, lengths = port.drain_tx_bursts(self.max_tx_burst)
             n = len(slots)
             if n == 0:
                 return 0
             stamps = read_stamps_vec(port.pool, slots, self.ts_offset)
-            rtts = np.maximum(0, now_ns - stamps)
+            if back_wire is None:
+                rtts = np.maximum(0, now_ns - stamps)
+                t0 = t1 = now_ns
+            else:
+                arrivals = back_wire.transmit_burst(now_ns, lengths)
+                rtts = np.maximum(0, arrivals - stamps)
+                t0, t1 = int(arrivals[0]), int(arrivals[-1])
             self.latency.record_many(rtts)
-            self.meter.merge_counts(n, int(lengths.sum()), now_ns, now_ns)
+            self.meter.merge_counts(n, int(lengths.sum()), t0, t1)
             self.flight.received += n
             port.pool.free_burst([int(s) for s in slots])
             return n
@@ -166,9 +276,11 @@ class LoadGen:
         for slot, length in done:
             buf = port.pool.view(slot, length)
             sent_ns = read_stamp(buf, self.ts_offset)
-            rtt = max(0, now_ns - sent_ns)
+            rx_ns = (now_ns if back_wire is None
+                     else back_wire.transmit(now_ns, length))
+            rtt = max(0, rx_ns - sent_ns)
             self.latency.record(rtt)
-            self.meter.on_packet(length, now_ns)
+            self.meter.on_packet(length, rx_ns)
             seq = read_seq(buf)
             want = self.flight.checksums.pop(seq, None)
             if want is not None and payload_checksum(buf, self.ts_offset) != want:
@@ -180,59 +292,188 @@ class LoadGen:
     # -- closed-loop (deterministic, for tests) -------------------------------
     def run_closed_loop(self, server: Server, n_packets: int,
                         packet_size: int = 256, window: int = 32,
-                        rng: Optional[np.random.Generator] = None) -> RunReport:
-        """Send exactly n packets keeping ≤window in flight; fully drain."""
+                        rng: Optional[np.random.Generator] = None,
+                        clock: Optional[SimClock] = None,
+                        round_ns: int = 1_000,
+                        max_rounds: int = 2_000_000) -> RunReport:
+        """Send exactly n packets keeping ≤window in flight; fully drain.
+
+        With a :class:`SimClock`, each scheduling round advances virtual time
+        by ``round_ns`` (a processing quantum), so RTTs and stats are exact
+        and bit-identical run-to-run; without one, the seed wall-clock
+        behaviour is preserved.
+        """
         sent = 0
-        start = time.perf_counter_ns()
+        if clock is not None and hasattr(server, "attach_clock") \
+                and getattr(server, "clock", None) is not clock:
+            server.attach_clock(clock)
+        poll_at = getattr(server, "poll_at", None) if clock is not None else None
+        start = time.perf_counter_ns() if clock is None else clock.now_ns
+        rounds = 0
         while self.flight.received < n_packets:
-            now = time.perf_counter_ns()
+            rounds += 1
+            now = time.perf_counter_ns() if clock is None else clock.now_ns
             while sent < n_packets and (sent - self.flight.received) < window:
                 self._send_one(self.ports[sent % len(self.ports)], packet_size, now, rng)
                 sent += 1
             for port in self.ports:
                 port.flush_rx()  # closed loop: no idle traffic to trigger writeback
-            server.poll_once()
-            now = time.perf_counter_ns()
+            if clock is None:
+                server.poll_once()
+                now = time.perf_counter_ns()
+            else:
+                clock.advance(round_ns)  # the quantum packets spend in service
+                if poll_at is not None:
+                    poll_at(clock.now_ns)
+                else:
+                    server.poll_once()
+                now = clock.now_ns
             for port in self.ports:
                 self._drain_port(port, now)
-            if time.perf_counter_ns() - start > 60e9:
-                break  # safety: never hang a test
+            if clock is None:
+                if time.perf_counter_ns() - start > 60e9:
+                    break  # safety: never hang a test
+            elif rounds >= max_rounds:
+                break  # safety: never hang a test (virtual-time analogue)
         return self._report(offered_gbps=0.0)
 
-    # -- open-loop timed run (bandwidth/latency measurement) ------------------
-    def run(self, server: Server, pattern: TrafficPattern,
-            duration_s: float = 0.25, drain_timeout_s: float = 0.5) -> RunReport:
-        """Offered-load run: pace packets at pattern.rate, measure RTT + drops."""
+    # -- open-loop virtual-time run (the default measurement mode) ------------
+    def run_sim(self, server: Server, pattern: TrafficPattern,
+                duration_s: float = 0.25,
+                clock: Optional[SimClock] = None,
+                max_rounds: int = 50_000_000) -> RunReport:
+        """Offered-load run in virtual time: event-by-event over the analytic
+        emission schedule.  Deterministic, host-speed-independent, and able
+        to simulate arbitrary rates (100 Gbps on one laptop core).
+
+        Event loop: the next event is the earliest of (next scheduled
+        emission, next frame landing off a wire, next lcore finishing its
+        modeled work).  At each event time we emit due frames onto the
+        forward wires, deliver due frames into RX rings (RSS + overflow
+        drops), give the server one scheduling round, and drain TX rings
+        through the return wires (recording RTT at return-arrival time).
+        """
+        if clock is None:
+            clock = getattr(server, "clock", None)
+        if clock is None:
+            clock = SimClock()
+        if hasattr(server, "attach_clock") \
+                and getattr(server, "clock", None) is not clock:
+            server.attach_clock(clock)
         rng = np.random.default_rng(pattern.seed)
         use_rng_payload = self.verify_integrity
+        times, sizes = pattern.emission_schedule(int(duration_s * 1e9), rng)
+        start = clock.now_ns
+        if len(times):
+            times = times + start
+            # anchor throughput at the first emission so a terminal
+            # writeback-flush drain can't shrink the measurement window
+            self.meter.open_window(int(times[0]))
+        nports = len(self.ports)
+        fwd = [_port_wire(p) for p in self.ports]
+        back = [_port_wire(p) for p in self.ports]
+        # frames in flight on each forward wire: FIFO of (arrival, slot, size)
+        on_wire: List[deque] = [deque() for _ in self.ports]
+        poll_at = getattr(server, "poll_at", None)
+        next_free = getattr(server, "next_free_ns", None)
+        i, n = 0, len(times)
+        flushed_idle = False
+        for _ in range(max_rounds):
+            now = clock.now_ns
+            moved = 0
+            # 1) emissions due: stamp with the *scheduled* time and put the
+            #    frame on its port's forward wire
+            while i < n and times[i] <= now:
+                t_emit = int(times[i])
+                size = int(sizes[i])
+                port = self.ports[i % nports]
+                slot = port.pool.alloc()
+                self.flight.sent += 1
+                if slot is not None:
+                    self._write_frame(port, slot, size, t_emit,
+                                      rng if use_rng_payload else None)
+                    arrival = fwd[i % nports].transmit(t_emit, size)
+                    on_wire[i % nports].append((arrival, slot, size))
+                i += 1
+                moved += 1
+            # 2) wire arrivals due: NIC-side delivery (RSS steering; ring
+            #    overflow drops here, exactly like hardware)
+            for pi, dq in enumerate(on_wire):
+                port = self.ports[pi]
+                while dq and dq[0][0] <= now:
+                    _, slot, size = dq.popleft()
+                    port.deliver(slot, size)
+                    moved += 1
+            # 3) one server scheduling round at virtual `now`
+            if poll_at is not None:
+                moved += poll_at(now)
+            else:
+                moved += server.poll_once()
+            # 4) wire-side TX drain; RTT recorded at return-link arrival
+            for pi, port in enumerate(self.ports):
+                moved += self._drain_port(port, now, back_wire=back[pi])
+            # 5) advance to the next event
+            cands = []
+            if i < n:
+                cands.append(int(times[i]))
+            for dq in on_wire:
+                if dq:
+                    cands.append(dq[0][0])
+            if next_free is not None:
+                nf = next_free(now)
+                if nf is not None:
+                    cands.append(nf)
+            if cands:
+                flushed_idle = False
+                clock.advance_to(min(cands))
+                continue
+            if moved > 0:
+                flushed_idle = False
+                continue
+            if not flushed_idle:
+                # quiet wire: the NIC's timeout-driven descriptor-cache
+                # writeback fires, releasing sub-threshold completions
+                for port in self.ports:
+                    port.flush_rx()
+                flushed_idle = True
+                continue
+            break  # nothing scheduled, nothing moving: remaining == drops
+        rep = self._report(
+            offered_gbps=pattern.rate_gbps if pattern.trace is None else 0.0)
+        rep.extras["sim_time"] = 1.0
+        rep.extras["virtual_elapsed_ns"] = float(clock.now_ns - start)
+        return rep
+
+    # -- open-loop timed run (wall-clock mode, for host-overhead studies) -----
+    def run(self, server: Server, pattern: TrafficPattern,
+            duration_s: float = 0.25, drain_timeout_s: float = 0.5) -> RunReport:
+        """Offered-load run paced against the host clock.
+
+        Uses the same analytic :meth:`TrafficPattern.emission_schedule` as
+        virtual time (so Poisson pacing is a true Poisson process here too);
+        the credit at elapsed wall time t is the number of scheduled
+        emissions ≤ t.
+        """
+        rng = np.random.default_rng(pattern.seed)
+        use_rng_payload = self.verify_integrity
+        duration_ns = int(duration_s * 1e9)
+        times, sizes = pattern.emission_schedule(duration_ns, rng)
+        n_sched = len(times)
+        fixed_size = pattern.trace is None
         start = time.perf_counter_ns()
-        end = start + int(duration_s * 1e9)
-        pps = pattern.packets_per_second()
-        trace = list(pattern.trace) if pattern.trace is not None else None
-        trace_i = 0
-        # Poisson pacing: pre-draw inter-arrival jitter factors
-        credit_sent = 0
+        end = start + duration_ns
+        if n_sched:
+            self.meter.open_window(start + int(times[0]))
+        sent_i = 0
         while True:
             now = time.perf_counter_ns()
             if now >= end:
                 break
-            # how many packets should have been emitted by now?
-            if trace is not None:
-                while trace_i < len(trace) and trace[trace_i][0] <= now - start:
-                    _, size = trace[trace_i]
-                    self._send_one(self.ports[trace_i % len(self.ports)],
-                                   max(MIN_FRAME, size), now,
-                                   rng if use_rng_payload else None)
-                    trace_i += 1
-            else:
-                target = int((now - start) * 1e-9 * pps)
-                if pattern.kind == "poisson":
-                    # jitter the credit target ±Poisson noise around the mean
-                    target = int(rng.poisson(max(target, 0)))
-                elif pattern.kind == "bursty":
-                    target = (target // pattern.burst_len) * pattern.burst_len
-                burst = min(target - credit_sent, self.max_tx_burst)
-                if burst > 0 and not use_rng_payload:
+            # how many scheduled emissions are due by now?
+            credit = int(np.searchsorted(times, now - start, side="right"))
+            burst = min(credit - sent_i, self.max_tx_burst)
+            if burst > 0:
+                if fixed_size and not use_rng_payload:
                     # vectorized emit, split evenly across ports (multi-NIC)
                     nports = len(self.ports)
                     share = burst // nports
@@ -241,13 +482,13 @@ class LoadGen:
                         k = share + (1 if pi < extra else 0)
                         if k > 0:
                             self._send_burst(port, k, pattern.packet_size, now)
-                    credit_sent += burst
+                    sent_i += burst
                 else:
-                    for _ in range(max(0, burst)):
-                        port = self.ports[credit_sent % len(self.ports)]
-                        self._send_one(port, pattern.packet_size, now,
+                    for _ in range(burst):
+                        port = self.ports[sent_i % len(self.ports)]
+                        self._send_one(port, int(sizes[sent_i]), now,
                                        rng if use_rng_payload else None)
-                        credit_sent += 1
+                        sent_i += 1
             server.poll_once()
             now = time.perf_counter_ns()
             for port in self.ports:
@@ -264,7 +505,8 @@ class LoadGen:
             now = time.perf_counter_ns()
             for port in self.ports:
                 self._drain_port(port, now)
-        return self._report(offered_gbps=pattern.rate_gbps)
+        return self._report(
+            offered_gbps=pattern.rate_gbps if pattern.trace is None else 0.0)
 
     def _report(self, offered_gbps: float) -> RunReport:
         rep = RunReport(
@@ -305,6 +547,7 @@ def find_max_sustainable_bandwidth(
     drop_tolerance_pct: float = 0.0,
     refine_iters: int = 5,
     pattern_kind: str = "uniform",
+    sim_time: Optional[bool] = None,
 ) -> Tuple[float, List[RunReport]]:
     """EtherLoadGen bandwidth-test mode: "gradually increases the bandwidth to
     find the maximum sustainable bandwidth ... without packet drops."
@@ -312,7 +555,11 @@ def find_max_sustainable_bandwidth(
     Multiplicative increase until the system drops packets, then bisection
     between the last sustainable and first unsustainable rates.  Every trial
     uses a fresh server/rings via ``make_setup`` so state never leaks.
-    Returns (msb_gbps, all trial reports).
+
+    ``sim_time``: True runs each trial in virtual time (deterministic,
+    host-independent — the default through :mod:`repro.exp`); False forces
+    wall-clock; None auto-detects (virtual when the factory's server carries
+    an attached :class:`SimClock`).  Returns (msb_gbps, all trial reports).
     """
 
     reports: List[RunReport] = []
@@ -320,8 +567,15 @@ def find_max_sustainable_bandwidth(
     def trial(rate: float) -> RunReport:
         server, ports = make_setup()
         lg = LoadGen(ports)
-        rep = lg.run(server, TrafficPattern(rate_gbps=rate, packet_size=packet_size,
-                                            kind=pattern_kind), duration_s=trial_s)
+        pattern = TrafficPattern(rate_gbps=rate, packet_size=packet_size,
+                                 kind=pattern_kind)
+        use_sim = sim_time
+        if use_sim is None:
+            use_sim = getattr(server, "clock", None) is not None
+        if use_sim:
+            rep = lg.run_sim(server, pattern, duration_s=trial_s)
+        else:
+            rep = lg.run(server, pattern, duration_s=trial_s)
         reports.append(rep)
         return rep
 

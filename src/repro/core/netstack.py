@@ -22,6 +22,15 @@ Stats discipline: every (port, queue) pair has its own :class:`ServerStats`
 written by exactly one lcore (no sharing, like DPDK's per-queue counters);
 ``stack.stats`` aggregates them on read, so the seed-era single-stats API
 keeps working.
+
+Virtual-time mode: :meth:`NetworkStack.attach_clock` installs a
+:class:`~repro.core.simclock.SimClock`.  Each lcore then carries its own
+*busy-until* timestamp: costs charged while it services queues
+(:meth:`NetworkStack.charge_ns`) extend that lcore's busy window instead of
+busy-waiting the host, and :meth:`NetworkStack.poll_at` only runs lcores
+whose busy window has passed.  N lcores therefore process packets in
+*parallel virtual time* even on a 1-core GIL-bound host — which is what lets
+the Fig. 3(a) core-scaling axis actually scale in this container.
 """
 from __future__ import annotations
 
@@ -31,6 +40,9 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from .cost import HostCostModel, spin_ns
+from .simclock import SimClock
 
 # Power-of-two burst-size bins: bucket i counts bursts of [2^i, 2^(i+1)).
 # Fixed size => stats memory is O(1) regardless of run length.
@@ -127,6 +139,62 @@ class NetworkStack:
         }
         self._stop_evt = threading.Event()
         self._threads: List[threading.Thread] = []
+        # virtual-time state (installed by attach_clock; None == wall-clock)
+        self.clock: Optional[SimClock] = None
+        self.sim_cost: HostCostModel = HostCostModel()
+        self._lcore_next_free: List[int] = []
+        self._accum_ns: float = 0.0
+
+    # -- virtual time ---------------------------------------------------------
+    def attach_clock(self, clock: SimClock,
+                     cost: Optional[HostCostModel] = None) -> "NetworkStack":
+        """Switch the stack to virtual-time execution.
+
+        ``cost`` supplies the polling-path cycle figures
+        (``pmd_poll_cycles``/``pmd_per_packet_cycles``) charged per serviced
+        burst; interrupt-driven stacks keep charging their own constructor
+        cost model, just onto the clock instead of a busy-wait.
+        """
+        self.clock = clock
+        if cost is not None:
+            self.sim_cost = cost
+        self._lcore_next_free = [clock.now_ns] * len(self.lcores)
+        return self
+
+    def charge_ns(self, ns: float) -> None:
+        """Account ``ns`` of host work on the currently-running lcore.
+
+        Wall-clock mode burns it for real (:func:`spin_ns`); virtual-time
+        mode accumulates it into the lcore's busy window (applied by
+        :meth:`poll_at` when the lcore quantum finishes).
+        """
+        if self.clock is None:
+            spin_ns(ns)
+        else:
+            self._accum_ns += ns
+
+    def poll_at(self, now_ns: int) -> int:
+        """One virtual-time scheduling round at ``now_ns``: every lcore whose
+        busy window has passed runs once; the costs it charges push its
+        next-free time forward.  Falls back to :meth:`poll_once` when no
+        clock is attached."""
+        if self.clock is None:
+            return self.poll_once()
+        total = 0
+        for i, lcore in enumerate(self.lcores):
+            if self._lcore_next_free[i] > now_ns:
+                continue  # core still busy with earlier packets
+            self._accum_ns = 0.0
+            total += self.run_lcore(lcore)
+            if self._accum_ns > 0:
+                self._lcore_next_free[i] = now_ns + int(round(self._accum_ns))
+        return total
+
+    def next_free_ns(self, now_ns: int) -> Optional[int]:
+        """Earliest future time any busy lcore frees up (None if all idle) —
+        the event the load generator waits on when the wire is quiet."""
+        future = [t for t in self._lcore_next_free if t > now_ns]
+        return min(future) if future else None
 
     # -- scheduling -----------------------------------------------------------
     def poll_once(self) -> int:
@@ -155,6 +223,14 @@ class NetworkStack:
     def start_lcore_threads(self) -> None:
         """Run each lcore in its own thread (GIL-serialized on 1-core hosts;
         use sequential ``poll_once`` for bandwidth numbers there)."""
+        if self.clock is not None:
+            # threads pace themselves on the host clock; with a SimClock
+            # attached, charges would race on _accum_ns and never apply to
+            # any lcore busy window — measurements would silently be wrong
+            raise RuntimeError(
+                "lcore threads are a wall-clock execution mode; build the "
+                "testbed with TrafficConfig(sim_time=False) (or don't "
+                "attach_clock) before start_lcore_threads()")
         if self._threads:
             return
         self._stop_evt.clear()

@@ -60,13 +60,22 @@ class Port:
         rx_queues: Sequence[RxDescriptorRing],
         tx_queues: Sequence[TxDescriptorRing],
         rss: Optional[RssIndirection] = None,
+        link_gbps: float = 0.0,
+        link_latency_ns: int = 0,
     ):
         if not rx_queues or len(rx_queues) != len(tx_queues):
             raise ValueError("need equal, nonzero RX and TX queue counts")
+        if link_latency_ns < 0:
+            raise ValueError("link_latency_ns must be >= 0")
         self.pool = pool
         self.rx_queues = list(rx_queues)
         self.tx_queues = list(tx_queues)
         self.rss = rss if rss is not None else RssIndirection(len(self.rx_queues))
+        # wire parameters consumed by the virtual-time load generator:
+        # serialization runs at link_gbps (<= 0 == ideal wire) and every frame
+        # pays link_latency_ns of propagation each way
+        self.link_gbps = float(link_gbps)
+        self.link_latency_ns = int(link_latency_ns)
 
     @staticmethod
     def make(
@@ -75,6 +84,8 @@ class Port:
         writeback_threshold: Optional[int] = 32,
         n_queues: int = 1,
         rss: Optional[RssIndirection] = None,
+        link_gbps: float = 0.0,
+        link_latency_ns: int = 0,
     ) -> "Port":
         return Port(
             pool,
@@ -86,6 +97,8 @@ class Port:
             tx_queues=[TxDescriptorRing(ring_size, queue_id=q)
                        for q in range(n_queues)],
             rss=rss,
+            link_gbps=link_gbps,
+            link_latency_ns=link_latency_ns,
         )
 
     @property
@@ -262,6 +275,11 @@ class BypassL2FwdServer(NetworkStack):
         qstats.rx_packets += n
         qstats.rx_bytes += int(lengths.sum())
         qstats.tx_packets += posted
+        if self.clock is not None:
+            # virtual-time mode: real code no longer sets the pace, so the
+            # PMD loop's work is charged explicitly (empty polls are free —
+            # a spinning PMD would otherwise never let simulated time end)
+            self.charge_ns(self.sim_cost.pmd_burst_ns(n))
         return n
 
 
@@ -331,6 +349,10 @@ class PipelineServer(NetworkStack):
             pushed = self.work_to_tx.push_burst(batch)
             for slot, _len, _q in batch[pushed:]:
                 self.port.pool.free(slot)  # stage ring full → drop
+            if self.clock is not None:
+                # the worker stage carries the per-packet processing cost;
+                # rx/tx stages are descriptor shuffling (folded into it)
+                self.charge_ns(self.sim_cost.pmd_burst_ns(len(batch)))
         return len(batch)
 
     def _tx_pass(self, burst: int) -> int:

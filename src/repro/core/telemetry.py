@@ -174,6 +174,16 @@ class ThroughputMeter:
     start_ns: Optional[int] = None
     end_ns: Optional[int] = None
 
+    def open_window(self, start_ns: int) -> None:
+        """Anchor the measurement window at the run's first emission.
+
+        Without this, a run whose completions all publish in one terminal
+        writeback flush would measure its throughput over the (tiny) drain
+        burst instead of the traffic interval and report absurd rates.
+        """
+        if self.start_ns is None:
+            self.start_ns = start_ns
+
     def on_packet(self, length: int, now_ns: int) -> None:
         if self.start_ns is None:
             self.start_ns = now_ns

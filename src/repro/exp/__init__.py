@@ -1,13 +1,13 @@
 # Declarative experiment layer: frozen configs -> Testbed -> RunReport.
 # The API every scenario (benchmark, example, future PR) builds on.
-from .config import (CostConfig, ExperimentConfig, PoolConfig, PortConfig,
-                     RssConfig, StackConfig, TrafficConfig)
+from .config import (CostConfig, ExperimentConfig, LinkConfig, PoolConfig,
+                     PortConfig, RssConfig, StackConfig, TrafficConfig)
 from .runner import make_server_factory, run_experiment, run_testbed
 from .testbed import Testbed, register_stack, stack_kinds
 
 __all__ = [
-    "CostConfig", "ExperimentConfig", "PoolConfig", "PortConfig", "RssConfig",
-    "StackConfig", "TrafficConfig",
+    "CostConfig", "ExperimentConfig", "LinkConfig", "PoolConfig", "PortConfig",
+    "RssConfig", "StackConfig", "TrafficConfig",
     "Testbed", "make_server_factory", "register_stack", "run_experiment",
     "run_testbed", "stack_kinds",
 ]

@@ -17,6 +17,7 @@ from dataclasses import asdict, dataclass, field, fields, replace
 from typing import Any, Dict, Optional, Tuple
 
 from repro.core.cost import HostCostModel
+from repro.core.loadgen import TRAFFIC_KINDS
 from repro.core.packet import DEFAULT_MTU, DEFAULT_TS_OFFSET
 from repro.core.rss import DEFAULT_TABLE_SIZE
 
@@ -84,14 +85,42 @@ class RssConfig:
 
 
 @dataclass(frozen=True)
+class LinkConfig:
+    """The wire attached to one port (virtual-time semantics).
+
+    ``gbps`` is the serialization rate — a frame occupies the wire for
+    ``bytes*8/gbps`` ns, and back-to-back frames queue FIFO behind it —
+    and ``latency_ns`` is one-way propagation.  ``gbps <= 0`` models an
+    ideal (infinitely fast) wire, the pre-SimClock behaviour.  The default
+    is a 100GbE link with 1 µs of cable+PHY latency, the paper's testbed
+    fabric.  Ignored in wall-clock mode, where the host *is* the wire.
+    """
+
+    gbps: float = 100.0
+    latency_ns: int = 1_000
+
+    def __post_init__(self) -> None:
+        if self.latency_ns < 0:
+            raise ValueError("latency_ns must be >= 0")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _config_to_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "LinkConfig":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
 class PortConfig:
     """One NIC device: queue count, per-queue ring size, writeback threshold
-    (the paper's §3.1.4 parameter), RSS."""
+    (the paper's §3.1.4 parameter), RSS, and the attached link."""
 
     n_queues: int = 1
     ring_size: int = 1024
     writeback_threshold: Optional[int] = 32
     rss: RssConfig = field(default_factory=RssConfig)
+    link: LinkConfig = field(default_factory=LinkConfig)
 
     def __post_init__(self) -> None:
         if self.n_queues < 1:
@@ -106,18 +135,23 @@ class PortConfig:
     def from_dict(cls, d: Dict[str, Any]) -> "PortConfig":
         d = dict(d)
         d["rss"] = RssConfig.from_dict(d.get("rss", {}))
+        d["link"] = LinkConfig.from_dict(d.get("link", {}))
         return cls(**d)
 
 
 @dataclass(frozen=True)
 class CostConfig:
-    """Kernel-stack host-cost model (mirrors
-    :class:`repro.core.cost.HostCostModel`); the Fig. 3(b) knobs."""
+    """Host-cost model (mirrors :class:`repro.core.cost.HostCostModel`); the
+    Fig. 3(b) knobs.  The ``pmd_*`` figures price the polling path in
+    virtual-time mode only (in wall-clock mode the PMD's real code is its
+    own cost — the paper's asymmetry)."""
 
     cpu_ghz: float = 2.0
     interrupt_cycles: int = 8000
     syscall_cycles: int = 1400
     per_packet_kernel_cycles: int = 2500
+    pmd_poll_cycles: int = 150
+    pmd_per_packet_cycles: int = 1100
 
     def to_host_cost_model(self) -> HostCostModel:
         return HostCostModel(**asdict(self))
@@ -126,7 +160,9 @@ class CostConfig:
     def from_host_cost_model(cls, m: HostCostModel) -> "CostConfig":
         return cls(cpu_ghz=m.cpu_ghz, interrupt_cycles=m.interrupt_cycles,
                    syscall_cycles=m.syscall_cycles,
-                   per_packet_kernel_cycles=m.per_packet_kernel_cycles)
+                   per_packet_kernel_cycles=m.per_packet_kernel_cycles,
+                   pmd_poll_cycles=m.pmd_poll_cycles,
+                   pmd_per_packet_cycles=m.pmd_per_packet_cycles)
 
     def to_dict(self) -> Dict[str, Any]:
         return _config_to_dict(self)
@@ -152,8 +188,12 @@ class StackConfig:
     n_lcores: Optional[int] = None           # None == one lcore per queue
     per_lcore_bursts: Optional[Tuple[int, ...]] = None  # BurstPlan override
     sockbuf_budget: int = 16                 # kernel stack: pkts per read()
+    sockbuf_capacity: int = 512              # kernel stack: rmem cap (skbs)
     stage_ring_capacity: int = 1024          # pipeline stack: SPSC ring depth
-    cost: Optional[CostConfig] = None        # kernel stack: modeled host costs
+    # modeled host costs: the kernel stack's syscall/IRQ figures in both
+    # timing modes, plus the pmd_* figures pricing polling stacks in
+    # virtual time.  None == CostConfig() defaults.
+    cost: Optional[CostConfig] = None
 
     def __post_init__(self) -> None:
         if self.burst_size < 1:
@@ -185,10 +225,17 @@ class TrafficConfig:
     * ``msb`` — the bandwidth-test mode: ramp + bisect to the maximum
       sustainable bandwidth (``start_gbps``/``max_gbps``/``trial_s``/
       ``refine_iters``/``drop_tolerance_pct``).
+
+    ``sim_time`` (default on) runs the experiment on a
+    :class:`~repro.core.simclock.SimClock`: durations are *virtual* seconds,
+    results are deterministic and host-independent, and host costs are
+    charged to lcore busy-time.  Turn it off to pace against the host clock
+    (the seed behaviour) for host-overhead studies.
     """
 
     mode: str = "open_loop"
     packet_size: int = 1518
+    sim_time: bool = True
     # open_loop
     rate_gbps: float = 1.0
     kind: str = "uniform"                    # uniform | poisson | bursty
@@ -215,6 +262,8 @@ class TrafficConfig:
     def __post_init__(self) -> None:
         if self.mode not in TRAFFIC_MODES:
             raise ValueError(f"traffic mode must be one of {TRAFFIC_MODES}")
+        if self.kind not in TRAFFIC_KINDS:
+            raise ValueError(f"traffic kind must be one of {TRAFFIC_KINDS}")
         if self.packet_size < 64:
             raise ValueError("packet_size must be >= 64 (MIN_FRAME)")
 

@@ -39,18 +39,22 @@ def make_server_factory(
 def run_testbed(tb: Testbed) -> RunReport:
     """Drive an already-built testbed per its config's traffic mode
     (``closed_loop`` or ``open_loop``; ``msb`` needs fresh testbeds per trial
-    — use :func:`run_experiment`)."""
+    — use :func:`run_experiment`).  ``cfg.traffic.sim_time`` selects virtual
+    time (the testbed's SimClock, deterministic) vs. wall-clock pacing."""
     t = tb.cfg.traffic
     if t.mode == "closed_loop":
         rng = (np.random.default_rng(t.payload_seed)
                if t.payload_seed is not None else None)
         return tb.loadgen.run_closed_loop(
             tb.server, n_packets=t.n_packets, packet_size=t.packet_size,
-            window=t.window, rng=rng)
+            window=t.window, rng=rng, clock=tb.clock)
     if t.mode == "open_loop":
         pattern = TrafficPattern(rate_gbps=t.rate_gbps,
                                  packet_size=t.packet_size, kind=t.kind,
                                  burst_len=t.burst_len, seed=t.seed)
+        if tb.clock is not None:
+            return tb.loadgen.run_sim(tb.server, pattern,
+                                      duration_s=t.duration_s, clock=tb.clock)
         return tb.loadgen.run(tb.server, pattern, duration_s=t.duration_s,
                               drain_timeout_s=t.drain_timeout_s)
     raise ValueError(f"run_testbed cannot drive traffic mode {t.mode!r}")
@@ -71,6 +75,7 @@ def run_experiment(cfg: ExperimentConfig) -> RunReport:
         drop_tolerance_pct=t.drop_tolerance_pct,
         refine_iters=t.refine_iters,
         pattern_kind=t.kind,
+        sim_time=t.sim_time,
     )
     good = [r for r in reports
             if r.drop_pct <= t.drop_tolerance_pct and r.received > 0]

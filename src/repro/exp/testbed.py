@@ -8,13 +8,13 @@ module (the gem5-stdlib/SimBricks extension point).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core import (BurstPlan, BypassL2FwdServer, EthConf, EthDev,
                         KernelStackServer, LoadGen, NetworkStack,
-                        PacketPool, PipelineServer, QueueTelemetry)
+                        PacketPool, PipelineServer, QueueTelemetry, SimClock)
 
-from .config import ExperimentConfig, StackConfig
+from .config import CostConfig, ExperimentConfig, StackConfig
 
 StackFactory = Callable[[StackConfig, Sequence[EthDev]], NetworkStack]
 
@@ -54,6 +54,7 @@ def _build_kernel(cfg: StackConfig, devs: Sequence[EthDev]) -> NetworkStack:
     cost = cfg.cost.to_host_cost_model() if cfg.cost is not None else None
     return KernelStackServer(list(devs), cost_model=cost,
                              sockbuf_budget=cfg.sockbuf_budget,
+                             sockbuf_capacity=cfg.sockbuf_capacity,
                              n_lcores=cfg.n_lcores)
 
 
@@ -65,12 +66,14 @@ class Testbed:
     __test__ = False  # name starts with "Test" but this is not a test class
 
     def __init__(self, cfg: ExperimentConfig, pool: PacketPool,
-                 devs: List[EthDev], server: NetworkStack, loadgen: LoadGen):
+                 devs: List[EthDev], server: NetworkStack, loadgen: LoadGen,
+                 clock: Optional[SimClock] = None):
         self.cfg = cfg
         self.pool = pool
         self.devs = devs
         self.server = server
         self.loadgen = loadgen
+        self.clock = clock  # the testbed's virtual time (None == wall clock)
         self.telemetry = QueueTelemetry()
 
     @property
@@ -89,18 +92,28 @@ class Testbed:
         for dev_id, pc in enumerate(cfg.ports):
             dev = EthDev(pool, dev_id=dev_id).configure(EthConf(
                 n_rx_queues=pc.n_queues, n_tx_queues=pc.n_queues,
-                rss_key=pc.rss.key, rss_table_size=pc.rss.table_size))
+                rss_key=pc.rss.key, rss_table_size=pc.rss.table_size,
+                link_gbps=pc.link.gbps, link_latency_ns=pc.link.latency_ns))
             for q in range(pc.n_queues):
                 dev.rx_queue_setup(q, pc.ring_size,
                                    writeback_threshold=pc.writeback_threshold)
                 dev.tx_queue_setup(q, pc.ring_size)
             devs.append(dev.dev_start())
         server = _STACKS[cfg.stack.kind](cfg.stack, devs)
+        clock: Optional[SimClock] = None
+        if cfg.traffic.sim_time:
+            # one virtual clock per testbed: the loadgen advances it, the
+            # server charges lcore busy-time against it
+            clock = SimClock()
+            if hasattr(server, "attach_clock"):
+                cost = (cfg.stack.cost if cfg.stack.cost is not None
+                        else CostConfig())
+                server.attach_clock(clock, cost.to_host_cost_model())
         t = cfg.traffic
         loadgen = LoadGen(devs, ts_offset=t.ts_offset,
                           verify_integrity=t.verify_integrity,
                           max_tx_burst=t.max_tx_burst, n_flows=t.n_flows)
-        return cls(cfg, pool, devs, server, loadgen)
+        return cls(cfg, pool, devs, server, loadgen, clock=clock)
 
     def xstats(self) -> Dict[str, int]:
         """Merged extended stats over every device, DPDK-named with a

@@ -2,21 +2,45 @@
 
 A FUNCTION (not a module-level constant) so importing this module never
 touches jax device state — smoke tests must keep seeing 1 device.
+
+``AxisType`` only exists in jax >= 0.5; on older jax every mesh axis is
+implicitly Auto, so the compat helpers below simply omit the argument.  All
+repo code (and the subprocess test scripts) build meshes through them
+instead of importing ``jax.sharding.AxisType`` directly.
 """
 from __future__ import annotations
 
+from typing import Dict, Sequence, Tuple
+
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:  # jax <= 0.4.x: axes are Auto by construction
+    AxisType = None
 
 from repro.parallel.axes import (AxisRules, multi_pod_rules, pure_fsdp_rules,
                                  single_pod_rules)
 
 
+def auto_axis_types_kw(n_axes: int) -> Dict[str, Tuple]:
+    """``{"axis_types": (Auto,) * n}`` where supported, else ``{}``."""
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
+
+
+def make_auto_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    """``jax.make_mesh`` with every axis Auto, on any supported jax."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         **auto_axis_types_kw(len(axes)))
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)
 
 
 def rules_for(mesh: Mesh, layout: str = "tp") -> AxisRules:
@@ -36,5 +60,5 @@ def make_smoke_mesh(n_devices: int = 1) -> Mesh:
     return Mesh(
         __import__("numpy").array(devs).reshape(1, len(devs)),
         ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
+        **auto_axis_types_kw(2),
     )

@@ -56,10 +56,11 @@ def test_partition_rules_cover_every_param(arch):
 
 def test_sanitize_spec_divisibility():
     import numpy as np
-    from jax.sharding import AxisType, Mesh
+    from jax.sharding import Mesh
+
+    from repro.launch.mesh import auto_axis_types_kw
     devs = np.array(jax.devices()[:1]).reshape(1, 1)
-    mesh = Mesh(devs, ("data", "model"),
-                axis_types=(AxisType.Auto, AxisType.Auto))
+    mesh = Mesh(devs, ("data", "model"), **auto_axis_types_kw(2))
     # 1-sized axes always divide
     assert sanitize_spec(P("data", None), (8, 4), mesh) == P("data", None)
 

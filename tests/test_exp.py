@@ -5,11 +5,11 @@ import json
 import pytest
 
 from repro.core import (BypassL2FwdServer, EthDevState, KernelStackServer,
-                        PipelineServer)
-from repro.exp import (CostConfig, ExperimentConfig, PoolConfig, PortConfig,
-                       RssConfig, StackConfig, TrafficConfig, Testbed,
-                       make_server_factory, register_stack, run_experiment,
-                       run_testbed, stack_kinds)
+                        PipelineServer, SimClock)
+from repro.exp import (CostConfig, ExperimentConfig, LinkConfig, PoolConfig,
+                       PortConfig, RssConfig, StackConfig, TrafficConfig,
+                       Testbed, make_server_factory, register_stack,
+                       run_experiment, run_testbed, stack_kinds)
 
 ZERO_COST = CostConfig(interrupt_cycles=0, syscall_cycles=0,
                        per_packet_kernel_cycles=0)
@@ -21,14 +21,16 @@ def _full_config() -> ExperimentConfig:
         name="roundtrip",
         pool=PoolConfig(n_slots=4096, slot_size=1024),
         ports=(PortConfig(n_queues=4, ring_size=512, writeback_threshold=None,
-                          rss=RssConfig(table_size=64, key_hex="ab" * 40)),
+                          rss=RssConfig(table_size=64, key_hex="ab" * 40),
+                          link=LinkConfig(gbps=25.0, latency_ns=350)),
                PortConfig(n_queues=2)),
         stack=StackConfig(kind="kernel", burst_size=32, n_lcores=2,
                           per_lcore_bursts=(8, 16), sockbuf_budget=32,
-                          cost=CostConfig(cpu_ghz=3.0, interrupt_cycles=4000)),
+                          cost=CostConfig(cpu_ghz=3.0, interrupt_cycles=4000,
+                                          pmd_per_packet_cycles=900)),
         traffic=TrafficConfig(mode="closed_loop", n_packets=500, window=64,
                               payload_seed=7, verify_integrity=True,
-                              packet_size=300))
+                              packet_size=300, sim_time=False))
 
 
 # -- config layer -------------------------------------------------------------
@@ -161,11 +163,25 @@ def test_run_experiment_is_deterministic_from_config():
 
 def test_run_experiment_msb_mode():
     cfg = ExperimentConfig(
-        traffic=TrafficConfig(mode="msb", trial_s=0.03, refine_iters=1,
+        traffic=TrafficConfig(mode="msb", trial_s=0.002, refine_iters=1,
                               start_gbps=0.1))
     rep = run_experiment(cfg)
     assert rep.extras["msb_gbps"] > 0
     assert rep.extras["msb_trials"] >= 1
+
+
+def test_sim_time_default_builds_clocked_testbed():
+    tb = Testbed.build(ExperimentConfig())
+    assert isinstance(tb.clock, SimClock)
+    assert tb.server.clock is tb.clock
+    # links flow config -> EthDev -> engine
+    assert tb.devs[0].link_gbps == 100.0
+    assert tb.devs[0].link_latency_ns == 1_000
+    # wall-clock mode opts out
+    tb_wall = Testbed.build(ExperimentConfig(
+        traffic=TrafficConfig(sim_time=False)))
+    assert tb_wall.clock is None
+    assert tb_wall.server.clock is None
 
 
 def test_make_server_factory_fresh_state():

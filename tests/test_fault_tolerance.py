@@ -17,9 +17,10 @@ _ELASTIC = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp
     import numpy as np
-    from jax.sharding import AxisType, Mesh, NamedSharding, PartitionSpec as P
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
     from repro.checkpoint.manager import CheckpointManager
+    from repro.launch.mesh import make_auto_mesh
     from repro.models import lm
     from repro.models.registry import get_smoke_config
     from repro.parallel.axes import AxisRules, axis_rules
@@ -32,8 +33,7 @@ _ELASTIC = textwrap.dedent("""
                              "vocab": "model"})
 
     def mesh_of(shape):
-        return jax.make_mesh(shape, ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        return make_auto_mesh(shape, ("data", "model"))
 
     # "job 1": 2x4 pod slice — init, save
     m1 = mesh_of((2, 4))
@@ -64,6 +64,7 @@ _ELASTIC = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow  # spawns a fresh 8-device jax process (wall-bound startup)
 def test_elastic_remesh_restore():
     """Checkpoint written on a (2,4) slice restores bit-exactly onto a (4,2)
     slice with the new mesh's shardings (node-failure relaunch path)."""
@@ -77,6 +78,7 @@ def test_elastic_remesh_restore():
     assert "ELASTIC OK" in r.stdout, r.stdout + "\n" + r.stderr
 
 
+@pytest.mark.slow  # real sleeps/poll deadlines (~10s of wall waiting)
 def test_straggler_port_drop_and_refill():
     """A producer port that stalls must not hang the consumer: the poll
     deadline fires, in-flight transfers are dropped, healthy ports keep

@@ -1,18 +1,30 @@
-"""LoadGen (EtherLoadGen analogue): integrity, drops, latency, MSB search."""
+"""LoadGen (EtherLoadGen analogue): integrity, drops, latency, MSB search.
+
+Open-loop and MSB tests run in virtual time (deterministic, fast); the
+wall-clock pacing path keeps regression coverage under ``-m slow``.
+"""
 import numpy as np
 import pytest
 
 from repro.core import (BypassL2FwdServer, KernelStackServer, LoadGen,
-                        PacketPool, Port, TrafficPattern,
+                        PacketPool, Port, SimClock, TrafficPattern,
                         find_max_sustainable_bandwidth)
 from repro.core.cost import HostCostModel
 
 
-def _setup(nports=1, pool_slots=2048, ring=256, wb=32):
+def _setup(nports=1, pool_slots=2048, ring=256, wb=32, link_gbps=100.0,
+           latency_ns=1000):
     pool = PacketPool(pool_slots, 1518)
-    ports = [Port.make(pool, ring_size=ring, writeback_threshold=wb)
+    ports = [Port.make(pool, ring_size=ring, writeback_threshold=wb,
+                       link_gbps=link_gbps, link_latency_ns=latency_ns)
              for _ in range(nports)]
     return pool, ports
+
+
+def _sim_server(ports, cost=None, **kw):
+    server = BypassL2FwdServer(ports, **kw)
+    server.attach_clock(SimClock(), cost or HostCostModel())
+    return server
 
 
 def test_l2fwd_payload_integrity():
@@ -24,7 +36,8 @@ def test_l2fwd_payload_integrity():
             server = BypassL2FwdServer(ports, burst_size=16)
             lg = LoadGen(ports, verify_integrity=True)
             rep = lg.run_closed_loop(server, n_packets=200, packet_size=size,
-                                     rng=np.random.default_rng(size))
+                                     rng=np.random.default_rng(size),
+                                     clock=SimClock())
             assert rep.received == 200
             assert rep.extras["integrity_errors"] == 0
             assert rep.dropped == 0
@@ -36,17 +49,17 @@ def test_kernel_stack_integrity():
         interrupt_cycles=0, syscall_cycles=0, per_packet_kernel_cycles=0))
     lg = LoadGen(ports, verify_integrity=True)
     rep = lg.run_closed_loop(server, n_packets=100, packet_size=300,
-                             rng=np.random.default_rng(0))
+                             rng=np.random.default_rng(0), clock=SimClock())
     assert rep.received == 100
     assert rep.extras["integrity_errors"] == 0
 
 
 def test_seq_and_timestamp_roundtrip():
     pool, ports = _setup()
-    server = BypassL2FwdServer(ports)
+    server = _sim_server(ports)
     lg = LoadGen(ports)
-    rep = lg.run(server, TrafficPattern(rate_gbps=0.05, packet_size=256),
-                 duration_s=0.05)
+    rep = lg.run_sim(server, TrafficPattern(rate_gbps=0.05, packet_size=256),
+                     duration_s=0.05)
     assert rep.received > 0
     assert rep.latency is not None
     assert rep.latency.min_ns > 0           # timestamps parsed & sane
@@ -58,14 +71,16 @@ def test_overload_produces_drops():
     """Tiny rings + huge offered rate must drop at the NIC, and the loadgen
     must account every one (sent == received + dropped)."""
     pool = PacketPool(64, 1518)
-    ports = [Port.make(pool, ring_size=8, writeback_threshold=8)]
+    ports = [Port.make(pool, ring_size=8, writeback_threshold=8,
+                       link_gbps=100.0)]
     # server that never polls: everything beyond ring+pool capacity drops
     class DeadServer:
         def poll_once(self):
             return 0
     lg = LoadGen(ports)
-    rep = lg.run(DeadServer(), TrafficPattern(rate_gbps=5.0, packet_size=1518),
-                 duration_s=0.05, drain_timeout_s=0.05)
+    rep = lg.run_sim(DeadServer(), TrafficPattern(rate_gbps=5.0,
+                                                  packet_size=1518),
+                     duration_s=0.002)
     assert rep.sent > 0
     assert rep.dropped > 0
     assert rep.received + rep.dropped == rep.sent
@@ -73,10 +88,10 @@ def test_overload_produces_drops():
 
 def test_msb_search_finds_sustainable_rate():
     def mk():
-        pool, ports = _setup(pool_slots=8192, ring=1024)
-        return BypassL2FwdServer(ports, burst_size=64), ports
+        pool, ports = _setup(pool_slots=8192, ring=1024, link_gbps=400.0)
+        return _sim_server(ports, burst_size=64), ports
     msb, reports = find_max_sustainable_bandwidth(
-        mk, trial_s=0.05, refine_iters=2, start_gbps=0.1)
+        mk, trial_s=0.002, refine_iters=2, start_gbps=0.1)
     assert msb > 0
     # the reported MSB trial itself had no drops
     ok_trials = [r for r in reports if r.drop_pct == 0 and r.sent > 0]
@@ -85,10 +100,10 @@ def test_msb_search_finds_sustainable_rate():
 
 def test_trace_replay():
     pool, ports = _setup()
-    server = BypassL2FwdServer(ports)
+    server = _sim_server(ports)
     lg = LoadGen(ports)
     trace = [(i * 100_000, 128 + (i % 3) * 64) for i in range(100)]
-    rep = lg.run(server, TrafficPattern(trace=trace), duration_s=0.05)
+    rep = lg.run_sim(server, TrafficPattern(trace=trace), duration_s=0.05)
     assert rep.sent == 100
     assert rep.received == 100
 
@@ -96,10 +111,53 @@ def test_trace_replay():
 def test_bursty_and_poisson_patterns():
     for kind in ("bursty", "poisson"):
         pool, ports = _setup(pool_slots=8192, ring=2048, wb=32)
-        server = BypassL2FwdServer(ports, burst_size=64)
+        server = _sim_server(ports, burst_size=64)
         lg = LoadGen(ports)
-        rep = lg.run(server, TrafficPattern(rate_gbps=0.2, packet_size=512,
-                                            kind=kind, seed=1),
-                     duration_s=0.05)
+        rep = lg.run_sim(server, TrafficPattern(rate_gbps=0.2, packet_size=512,
+                                                kind=kind, seed=1),
+                         duration_s=0.02)
         assert rep.received > 0
         assert rep.received + rep.dropped == rep.sent
+
+
+# -- wall-clock pacing regression coverage (-m slow) --------------------------
+
+@pytest.mark.slow
+def test_wall_clock_open_loop_still_measures():
+    """The retained host-clock mode (sim_time=False analogue): real pacing,
+    real RTTs, exact drop accounting."""
+    pool, ports = _setup(link_gbps=0.0, latency_ns=0)
+    server = BypassL2FwdServer(ports)
+    lg = LoadGen(ports)
+    rep = lg.run(server, TrafficPattern(rate_gbps=0.05, packet_size=256),
+                 duration_s=0.05)
+    assert rep.received > 0
+    assert rep.latency.min_ns > 0
+    assert rep.received + rep.dropped == rep.sent
+
+
+@pytest.mark.slow
+def test_wall_clock_poisson_uses_predrawn_interarrivals():
+    """The wall path paces off the same analytic schedule (the Poisson fix
+    applies to both modes)."""
+    pool, ports = _setup(pool_slots=8192, ring=2048, link_gbps=0.0,
+                         latency_ns=0)
+    server = BypassL2FwdServer(ports, burst_size=64)
+    lg = LoadGen(ports)
+    rep = lg.run(server, TrafficPattern(rate_gbps=0.2, packet_size=512,
+                                        kind="poisson", seed=1),
+                 duration_s=0.05)
+    assert rep.received > 0
+    assert rep.received + rep.dropped == rep.sent
+
+
+@pytest.mark.slow
+def test_wall_clock_msb_search():
+    def mk():
+        pool, ports = _setup(pool_slots=8192, ring=1024, link_gbps=0.0,
+                             latency_ns=0)
+        return BypassL2FwdServer(ports, burst_size=64), ports
+    msb, reports = find_max_sustainable_bandwidth(
+        mk, trial_s=0.05, refine_iters=2, start_gbps=0.1, sim_time=False)
+    assert msb > 0
+    assert any(r.drop_pct == 0 and r.sent > 0 for r in reports)

@@ -17,15 +17,15 @@ _SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp
     import numpy as np
-    from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.launch.mesh import make_auto_mesh
     from repro.models import lm
     from repro.models.moe import apply_moe, init_moe_layer, _moe_compute_local
     from repro.models.registry import get_smoke_config
     from repro.parallel.axes import AxisRules, axis_rules
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_auto_mesh((2, 4), ("data", "model"))
     rules = AxisRules(rules={"batch": ("data",), "fsdp": ("data",),
                              "experts": "model", "ffn": "model"})
 
@@ -54,6 +54,7 @@ _SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow  # spawns a fresh 8-device jax process (wall-bound startup)
 def test_moe_shard_map_matches_local():
     env = dict(os.environ, PYTHONPATH="src")
     env.pop("XLA_FLAGS", None)
