@@ -1,0 +1,66 @@
+"""Multi-host scenarios on the Switch/Topology layer.
+
+Two benchmarks the single-host loopback harness could never express:
+
+* **forward** — one client and one server node on opposite switch ports,
+  client→server→client RTT vs offered rate.  The RTT floor is four wire
+  crossings (uplink + egress, each way); the knee appears as the offered
+  rate approaches the fabric's line rate.
+* **incast** — N clients converge on one server (the classic N:1 pattern).
+  The switch egress port facing the server saturates first: the RTT tail
+  fattens with client count, and every loss is a switch egress-buffer drop
+  (``sw_p0_egress_drops``) while the server NIC stays clean (``imissed`` /
+  ``rx_nombuf`` == 0) — the loss-attribution split a single-NIC model
+  cannot produce.
+
+Rows: ``us_per_call`` is the p99 RTT in µs; ``derived`` carries achieved
+aggregate Gbps, drop counts and egress-buffer high water.
+"""
+from __future__ import annotations
+
+from repro.exp import (LinkConfig, NodeConfig, PoolConfig, PortConfig,
+                       StackConfig, SwitchConfig, TopologyConfig,
+                       TrafficConfig, run_topology_experiment)
+
+from .common import emit
+
+
+def topology(n_clients: int, rate_gbps: float, duration_s: float,
+             egress_capacity: int = 32, link_gbps: float = 10.0) -> TopologyConfig:
+    """One server node + N fabric-attached clients around one switch."""
+    return TopologyConfig(
+        name=f"incast-{n_clients}x{rate_gbps:g}",
+        nodes=(NodeConfig(name="server", pool=PoolConfig(n_slots=16384),
+                          port=PortConfig(ring_size=2048,
+                                          writeback_threshold=1),
+                          stack=StackConfig(kind="bypass", burst_size=64)),),
+        n_clients=n_clients,
+        switch=SwitchConfig(egress_capacity=egress_capacity,
+                            link=LinkConfig(gbps=link_gbps, latency_ns=1000)),
+        traffic=TrafficConfig(mode="open_loop", rate_gbps=rate_gbps,
+                              packet_size=1518, duration_s=duration_s,
+                              seed=7))
+
+
+def run(trial_s: float = 0.0004) -> None:
+    # client -> server forward path: RTT vs offered rate on a 10 GbE fabric
+    for rate in (1.0, 4.0, 8.0):
+        rep = run_topology_experiment(topology(1, rate, trial_s))
+        lat = rep.latency
+        emit(f"incast_forward_r{rate:g}", lat.p99_ns / 1e3,
+             f"gbps={rep.achieved_gbps:.2f};med_us={lat.median_ns/1e3:.1f};"
+             f"drops={rep.dropped}")
+    # N:1 incast: fixed 3 Gbps per client into one 10 GbE egress port
+    for n in (1, 2, 4, 8):
+        rep = run_topology_experiment(topology(n, 3.0, trial_s))
+        lat = rep.latency
+        emit(f"incast_c{n}", lat.p99_ns / 1e3,
+             f"gbps={rep.achieved_gbps:.2f};sw_drops="
+             f"{int(rep.extras['sw_p0_egress_drops'])};occ_high="
+             f"{int(rep.extras['sw_p0_occ_high'])};imissed="
+             f"{int(rep.extras['n0_imissed'])};drop_pct={rep.drop_pct:.1f}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -5,20 +5,21 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=["fig3a", "fig3b", "fig4", "latency", "kernels",
-                             "roofline"])
+                    choices=["fig3a", "fig3b", "fig4", "incast", "latency",
+                             "kernels", "roofline"])
     # VIRTUAL seconds per MSB trial since the SimClock refactor: a few ms of
     # simulated traffic is statistically plenty and runs fast at any rate
     ap.add_argument("--trial-s", type=float, default=0.004)
     args = ap.parse_args()
 
     from . import (fig3a_scalability, fig3b_sensitivity, fig4_dca_burst,
-                   kernels_bench, roofline, tbl_latency)
+                   fig_incast, kernels_bench, roofline, tbl_latency)
 
     sections = [
         ("fig3a", lambda: fig3a_scalability.run(trial_s=args.trial_s)),
         ("fig3b", lambda: fig3b_sensitivity.run(trial_s=args.trial_s)),
         ("fig4", fig4_dca_burst.run),
+        ("incast", lambda: fig_incast.run(trial_s=min(args.trial_s, 0.001))),
         ("latency", tbl_latency.run),
         ("kernels", kernels_bench.run),
         ("roofline", roofline.run),

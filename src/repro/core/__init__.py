@@ -18,9 +18,13 @@ from .packet import (
     PacketPool,
     PacketRef,
     checksum,
+    echo_payload_checksum,
     flow_bytes,
     flow_tuple_for_id,
+    l2fwd_echo,
+    l2fwd_echo_vec,
     payload_checksum,
+    read_dst_ip,
     read_flow,
     read_flow_bytes,
     read_flow_bytes_vec,
@@ -29,6 +33,8 @@ from .packet import (
     read_stamp,
     read_stamps_vec,
     stamp,
+    swap_flow_ips,
+    swap_flow_ips_vec,
     swap_macs,
     swap_macs_vec,
     write_flow,
@@ -39,6 +45,7 @@ from .packet import (
 from .pmd import BypassL2FwdServer, PipelineServer, Port
 from .rings import SpscRing
 from .simclock import EventScheduler, SimClock, Wire
+from .switch import Switch, SwitchPort
 from .rss import DEFAULT_RSS_KEY, RssIndirection, toeplitz_hash, toeplitz_hash_vec
 from .telemetry import (LatencyRecorder, LatencyStats, QueueTelemetry,
                         RunReport, ThroughputMeter, rss_skew)
@@ -50,13 +57,17 @@ __all__ = [
     "LatencyRecorder", "LatencyStats", "Lcore", "LoadGen", "NetworkStack",
     "OccupancyTrace", "PacketPool", "PacketRef", "PipelineServer", "Port",
     "QueueTelemetry", "RssIndirection", "RunReport", "RxDescriptorRing",
-    "ServerStats", "SimClock", "SpscRing", "ThroughputMeter", "TrafficPattern",
+    "ServerStats", "SimClock", "SpscRing", "Switch", "SwitchPort",
+    "ThroughputMeter", "TrafficPattern",
     "TxDescriptorRing", "Wire", "ZERO_COST",
-    "checksum", "find_max_sustainable_bandwidth", "flow_bytes",
-    "flow_tuple_for_id", "make_feed", "payload_checksum", "read_flow",
+    "checksum", "echo_payload_checksum", "find_max_sustainable_bandwidth",
+    "flow_bytes",
+    "flow_tuple_for_id", "l2fwd_echo", "l2fwd_echo_vec", "make_feed",
+    "payload_checksum", "read_dst_ip", "read_flow",
     "read_flow_bytes", "read_flow_bytes_vec", "read_seq", "read_stamp",
     "rss_skew",
-    "run_burst_experiment", "spin_ns", "stamp", "swap_macs",
+    "run_burst_experiment", "spin_ns", "stamp", "swap_flow_ips",
+    "swap_flow_ips_vec", "swap_macs",
     "toeplitz_hash", "toeplitz_hash_vec", "write_flow", "write_flow_ids_vec",
     "write_seq",
     "DEFAULT_MTU", "DEFAULT_RSS_KEY", "DEFAULT_TS_OFFSET", "ETH_HEADER_SIZE",

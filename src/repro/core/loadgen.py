@@ -50,6 +50,7 @@ from .packet import (
     FLOW_SIZE,
     MIN_FRAME,
     PacketPool,
+    echo_payload_checksum,
     flow_tuple_for_id,
     payload_checksum,
     read_seq,
@@ -115,8 +116,15 @@ class TrafficPattern:
         """
         empty = (np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int32))
         if self.trace is not None:
-            entries = [(int(t), max(MIN_FRAME, int(s)))
-                       for t, s in self.trace if int(t) < duration_ns]
+            raw = [(int(t), max(MIN_FRAME, int(s))) for t, s in self.trace]
+            if any(t < 0 for t, _ in raw):
+                raise ValueError("trace time offsets must be >= 0")
+            # the contract is "times non-decreasing": an out-of-order trace
+            # would silently corrupt both run_sim's event loop and run's
+            # searchsorted credit, so sort here (stable: equal-time entries
+            # keep their input order)
+            raw.sort(key=lambda e: e[0])
+            entries = [e for e in raw if e[0] < duration_ns]
             if not entries:
                 return empty
             times = np.array([t for t, _ in entries], dtype=np.int64)
@@ -179,6 +187,8 @@ class LoadGen:
         max_tx_burst: int = 64,
         latency_capacity_hint: int = 1 << 16,
         n_flows: int = 256,
+        src_ip_base: Optional[int] = None,
+        dst_ip: Optional[int] = None,
     ):
         if n_flows < 1:
             raise ValueError("n_flows must be >= 1")
@@ -195,28 +205,37 @@ class LoadGen:
         self.verify_integrity = verify_integrity
         self.max_tx_burst = max_tx_burst
         # distinct flow 4-tuples emitted round-robin; RSS spreads them over
-        # the port's RX queues (the Fig. 3(a) core-scaling traffic shape)
+        # the port's RX queues (the Fig. 3(a) core-scaling traffic shape).
+        # Topology scenarios pin src_ip_base (this generator's client /16,
+        # what a switch routes replies back on) and dst_ip (the target node).
         self.n_flows = n_flows
+        self.src_ip_base = src_ip_base
+        self.dst_ip = dst_ip
         self.latency = LatencyRecorder(latency_capacity_hint)
         self.meter = ThroughputMeter()
         self.flight = _Flight()
         self._next_seq = 0
 
     # -- wire-side primitives ------------------------------------------------
-    def _write_frame(self, port: Port, slot: int, size: int, stamp_ns: int,
-                     rng: Optional[np.random.Generator]) -> int:
-        """Fill one allocated slot: seq, timestamp, flow tuple, checksum."""
+    def _write_frame(self, pool: PacketPool, slot: int, size: int,
+                     stamp_ns: int, rng: Optional[np.random.Generator],
+                     record_checksum: bool = True) -> int:
+        """Fill one allocated slot: seq, timestamp, flow tuple, checksum.
+        Fabric emitters pass ``record_checksum=False`` and record their own
+        (echo-safe) checksum over the byte copy instead."""
         seq = self._next_seq
         self._next_seq += 1
-        port.pool.write_packet(
+        pool.write_packet(
             slot, seq=seq, length=size, ts_offset=self.ts_offset,
             timestamp_ns=stamp_ns, fill=(seq & 0xFF) if rng is None else None,
             rng=rng,
         )
-        write_flow(port.pool.arena[slot], *flow_tuple_for_id(seq % self.n_flows))
-        if self.verify_integrity:
+        write_flow(pool.arena[slot], *flow_tuple_for_id(
+            seq % self.n_flows, src_ip_base=self.src_ip_base,
+            dst_ip=self.dst_ip))
+        if self.verify_integrity and record_checksum:
             self.flight.checksums[seq] = payload_checksum(
-                port.pool.view(slot, size), self.ts_offset
+                pool.view(slot, size), self.ts_offset
             )
         return seq
 
@@ -227,7 +246,7 @@ class LoadGen:
             # Generator out of buffers == system not recycling fast enough.
             self.flight.sent += 1
             return False
-        self._write_frame(port, slot, size, now_ns, rng)
+        self._write_frame(port.pool, slot, size, now_ns, rng)
         self.flight.sent += 1
         # RSS steers the frame to a queue; ring overflow → drop at the NIC
         # (the Port recycles the buffer)
@@ -243,7 +262,8 @@ class LoadGen:
         seqs = np.arange(self._next_seq, self._next_seq + len(slots), dtype=np.int64)
         self._next_seq += len(slots)
         write_packets_vec(port.pool, slots_arr, seqs, size, self.ts_offset, now_ns)
-        write_flow_ids_vec(port.pool, slots_arr, seqs % self.n_flows)
+        write_flow_ids_vec(port.pool, slots_arr, seqs % self.n_flows,
+                           src_ip_base=self.src_ip_base, dst_ip=self.dst_ip)
         lengths = np.full(len(slots), size, dtype=np.int32)
         # RSS routes the burst across the port's RX queues; per-queue ring
         # overflow drops at the NIC (the Port recycles those buffers)
@@ -288,6 +308,48 @@ class LoadGen:
             self.flight.received += 1
             port.pool.free(slot)
         return len(done)
+
+    # -- fabric attachment (switch/topology mode) -----------------------------
+    # A generator attached to a :class:`~repro.core.switch.Switch` port does
+    # not own the far NIC: its frames leave as raw bytes on the fabric and
+    # completions come back the same way.  These two primitives are the
+    # switch-port counterparts of _send_one/_drain_port; the topology driver
+    # (:mod:`repro.exp.topology`) supplies the timing.
+
+    def make_frame(self, pool: PacketPool, size: int, stamp_ns: int,
+                   rng: Optional[np.random.Generator] = None,
+                   ) -> Optional[np.ndarray]:
+        """Emit one frame for a fabric attachment: format it in ``pool``
+        (this generator's own buffer arena) and hand back a byte copy — the
+        serialized form a wire carries between address spaces.  Returns None
+        (and counts the send, so the loss is attributed) when the generator
+        is out of buffers."""
+        slot = pool.alloc()
+        self.flight.sent += 1
+        if slot is None:
+            return None
+        seq = self._write_frame(pool, slot, size, stamp_ns, rng,
+                                record_checksum=False)
+        frame = pool.view(slot, size).copy()
+        pool.free(slot)
+        if self.verify_integrity:
+            # the fabric's echo server legitimately rewrites macs + flow IPs,
+            # so integrity is checked past the flow tuple
+            self.flight.checksums[seq] = echo_payload_checksum(frame)
+        return frame
+
+    def complete_frame(self, frame: np.ndarray, now_ns: int) -> None:
+        """Record one completion arriving off the fabric at virtual
+        ``now_ns`` (the switch's egress wire already charged serialization +
+        propagation): timestamp-compare for RTT, throughput, integrity."""
+        sent_ns = read_stamp(frame, self.ts_offset)
+        self.latency.record(max(0, int(now_ns) - sent_ns))
+        self.meter.on_packet(len(frame), int(now_ns))
+        if self.verify_integrity:
+            want = self.flight.checksums.pop(read_seq(frame), None)
+            if want is not None and echo_payload_checksum(frame) != want:
+                self.flight.integrity_errors += 1
+        self.flight.received += 1
 
     # -- closed-loop (deterministic, for tests) -------------------------------
     def run_closed_loop(self, server: Server, n_packets: int,
@@ -390,7 +452,7 @@ class LoadGen:
                 slot = port.pool.alloc()
                 self.flight.sent += 1
                 if slot is not None:
-                    self._write_frame(port, slot, size, t_emit,
+                    self._write_frame(port.pool, slot, size, t_emit,
                                       rng if use_rng_payload else None)
                     arrival = fwd[i % nports].transmit(t_emit, size)
                     on_wire[i % nports].append((arrival, slot, size))
@@ -553,7 +615,12 @@ def find_max_sustainable_bandwidth(
     find the maximum sustainable bandwidth ... without packet drops."
 
     Multiplicative increase until the system drops packets, then bisection
-    between the last sustainable and first unsustainable rates.  Every trial
+    between the last sustainable and first unsustainable rates.  The reported
+    MSB is the highest *offered* rate whose trial actually sustained (the
+    per-trial achieved rates live in the returned reports) — and the
+    bisection's lower bound is always a rate that was probed and sustained:
+    if the very first ramp trial fails, the search probes downward before
+    refining instead of assuming an unvalidated ``bad/2`` floor.  Every trial
     uses a fresh server/rings via ``make_setup`` so state never leaks.
 
     ``sim_time``: True runs each trial in virtual time (deterministic,
@@ -579,26 +646,40 @@ def find_max_sustainable_bandwidth(
         reports.append(rep)
         return rep
 
-    # Phase 1: multiplicative ramp
+    def sustained(rep: RunReport) -> bool:
+        return rep.drop_pct <= drop_tolerance_pct and rep.sent > 0
+
+    # Phase 1: multiplicative ramp.  ``good`` tracks the highest *offered*
+    # rate that sustained (achieved rates stay in the reports).
     good, bad = 0.0, None
     rate = start_gbps
     while rate <= max_gbps:
-        rep = trial(rate)
-        if rep.drop_pct <= drop_tolerance_pct and rep.sent > 0:
-            good = max(good, rep.achieved_gbps)
+        if sustained(trial(rate)):
+            good = max(good, rate)
             rate *= 2.0
         else:
             bad = rate
             break
     if bad is None:
         return good, reports
-    # Phase 2: bisection
     lo, hi = bad / 2.0, bad
+    if good == 0.0:
+        # The very first ramp trial failed, so ``lo`` was never validated as
+        # sustainable.  Probe downward until a sustainable floor is found
+        # (restoring the bisection invariant) or give up at 0.
+        found = False
+        for _ in range(12):
+            if sustained(trial(lo)):
+                good, found = lo, True
+                break
+            lo, hi = lo / 2.0, lo
+        if not found:
+            return 0.0, reports
+    # Phase 2: bisection between a validated-sustainable lo and a failing hi
     for _ in range(refine_iters):
         mid = 0.5 * (lo + hi)
-        rep = trial(mid)
-        if rep.drop_pct <= drop_tolerance_pct and rep.sent > 0:
-            good = max(good, rep.achieved_gbps)
+        if sustained(trial(mid)):
+            good = max(good, mid)
             lo = mid
         else:
             hi = mid

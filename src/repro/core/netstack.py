@@ -82,13 +82,24 @@ class ServerStats:
         ]
 
     def merge_from(self, other: "ServerStats") -> "ServerStats":
-        """Accumulate another stats object (per-queue → aggregate)."""
+        """Accumulate another stats object (per-queue → aggregate).
+
+        Exhaustive over the dataclass fields: numeric fields add, array
+        fields add elementwise, and anything else raises — a stats subclass
+        adding a field of an unmergeable type must override this method
+        rather than have its counters silently dropped from aggregates.
+        """
         for f in dataclasses.fields(other):
             v = getattr(other, f.name)
             if isinstance(v, np.ndarray):
                 getattr(self, f.name).__iadd__(v)
-            elif isinstance(v, int):
+            elif isinstance(v, (int, float, np.integer, np.floating)):
                 setattr(self, f.name, getattr(self, f.name, 0) + v)
+            else:
+                raise TypeError(
+                    f"{type(self).__name__}.merge_from cannot merge field "
+                    f"{f.name!r} of type {type(v).__name__}; override "
+                    "merge_from in the subclass")
         return self
 
 

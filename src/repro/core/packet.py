@@ -153,18 +153,31 @@ def swap_macs(buf: np.ndarray) -> None:
     buf[6:12] = tmp
 
 
-def flow_tuple_for_id(flow_id: int) -> Tuple[int, int, int, int]:
+DEFAULT_SRC_IP_BASE = 0x0A000000  # 10.0.0.0: the loadgen's client space
+DEFAULT_DST_IP = 0xC0A80001       # 192.168.0.1: the single-host server
+
+
+def flow_tuple_for_id(
+    flow_id: int,
+    src_ip_base: Optional[int] = None,
+    dst_ip: Optional[int] = None,
+) -> Tuple[int, int, int, int]:
     """Synthetic (src_ip, dst_ip, src_port, dst_port) for an abstract flow id.
 
     Distinct ids differ in src_ip and src_port — the fields real load
-    generators sweep — so distinct flows hash apart under RSS.
+    generators sweep — so distinct flows hash apart under RSS.  Topology
+    scenarios override ``src_ip_base`` (a per-generator /16 such as
+    ``10.g.0.0``, so a switch can route replies back to the right client)
+    and ``dst_ip`` (the target node's address, what the switch forwards on).
     """
     flow_id = int(flow_id)
-    src_ip = 0x0A000000 | (flow_id & 0xFFFF)          # 10.0.x.x
-    dst_ip = 0xC0A80001                                # 192.168.0.1
+    base = DEFAULT_SRC_IP_BASE if src_ip_base is None else int(src_ip_base)
+    src_ip = base | (flow_id & 0xFFFF)
     src_port = 1024 + (flow_id % 60000)
     dst_port = 443
-    return src_ip, dst_ip, src_port, dst_port
+    return (src_ip,
+            DEFAULT_DST_IP if dst_ip is None else int(dst_ip),
+            src_port, dst_port)
 
 
 def write_flow(buf: np.ndarray, src_ip: int, dst_ip: int,
@@ -190,6 +203,28 @@ def flow_bytes(buf: np.ndarray) -> np.ndarray:
     return buf[FLOW_OFFSET : FLOW_OFFSET + FLOW_SIZE]
 
 
+def read_dst_ip(buf: np.ndarray) -> int:
+    """The frame's destination address (flow dst_ip, big endian) — the field
+    a :class:`~repro.core.switch.Switch` forwards on."""
+    return int.from_bytes(bytes(buf[FLOW_OFFSET + 4 : FLOW_OFFSET + 8]), "big")
+
+
+def swap_flow_ips(buf: np.ndarray) -> None:
+    """Swap the flow src/dst IPs in place — the reply-addressing half of an
+    echo server (pairs :func:`swap_macs`), so switched topologies can route
+    the reply back to the client that sent the request."""
+    tmp = buf[FLOW_OFFSET : FLOW_OFFSET + 4].copy()
+    buf[FLOW_OFFSET : FLOW_OFFSET + 4] = buf[FLOW_OFFSET + 4 : FLOW_OFFSET + 8]
+    buf[FLOW_OFFSET + 4 : FLOW_OFFSET + 8] = tmp
+
+
+def l2fwd_echo(buf: np.ndarray) -> None:
+    """The topology-aware L2Fwd transform: swap macs AND flow IPs, so the
+    forwarded frame is addressed back to its sender."""
+    swap_macs(buf)
+    swap_flow_ips(buf)
+
+
 def checksum(buf: np.ndarray) -> int:
     """CRC32 over the whole frame (payload-integrity check, paper §4.2)."""
     return zlib.crc32(buf.tobytes()) & 0xFFFFFFFF
@@ -199,6 +234,13 @@ def payload_checksum(buf: np.ndarray, ts_offset: int = DEFAULT_TS_OFFSET) -> int
     """CRC32 over payload only (excludes header/seq/timestamp, which L2Fwd and
     the loadgen legitimately rewrite)."""
     return zlib.crc32(buf[ts_offset + 8 :].tobytes()) & 0xFFFFFFFF
+
+
+def echo_payload_checksum(buf: np.ndarray) -> int:
+    """CRC32 over payload past the flow tuple — the integrity check for
+    switched topologies, where the echo server legitimately rewrites the
+    flow IPs (:func:`swap_flow_ips`) in addition to header/seq/timestamp."""
+    return zlib.crc32(buf[FLOW_OFFSET + FLOW_SIZE :].tobytes()) & 0xFFFFFFFF
 
 
 # -- vectorized burst helpers (DPDK-style amortization) ---------------------
@@ -248,15 +290,21 @@ def read_seqs_vec(pool: PacketPool, slots: np.ndarray) -> np.ndarray:
 
 
 def write_flow_ids_vec(pool: PacketPool, slots: np.ndarray,
-                       flow_ids: np.ndarray) -> None:
+                       flow_ids: np.ndarray,
+                       src_ip_base: Optional[int] = None,
+                       dst_ip: Optional[int] = None) -> None:
     """Write synthetic flow 4-tuples for a burst (one fancy-indexed store).
 
-    Same mapping as :func:`flow_tuple_for_id`, vectorized over the burst.
+    Same mapping as :func:`flow_tuple_for_id` (including its topology
+    ``src_ip_base``/``dst_ip`` overrides), vectorized over the burst.
     """
     arena = pool.arena
     ids = flow_ids.astype(np.int64)
-    src_ip = (0x0A000000 | (ids & 0xFFFF)).astype(">u4")
-    dst_ip = np.full(len(ids), 0xC0A80001, dtype=">u4")
+    base = DEFAULT_SRC_IP_BASE if src_ip_base is None else int(src_ip_base)
+    src_ip = (base | (ids & 0xFFFF)).astype(">u4")
+    dst_ip = np.full(len(ids),
+                     DEFAULT_DST_IP if dst_ip is None else int(dst_ip),
+                     dtype=">u4")
     src_port = (1024 + (ids % 60000)).astype(">u2")
     dst_port = np.full(len(ids), 443, dtype=">u2")
     arena[slots, FLOW_OFFSET : FLOW_OFFSET + 4] = src_ip.view(np.uint8).reshape(-1, 4)
@@ -287,6 +335,23 @@ def swap_macs_vec(pool: PacketPool, slots: np.ndarray,
     dst = arena[slots, 0:6].copy()
     arena[slots, 0:6] = arena[slots, 6:12]
     arena[slots, 6:12] = dst
+
+
+def swap_flow_ips_vec(pool: PacketPool, slots: np.ndarray,
+                      lengths: Optional[np.ndarray] = None) -> None:
+    """Burst variant of :func:`swap_flow_ips`."""
+    arena = pool.arena
+    src = arena[slots, FLOW_OFFSET : FLOW_OFFSET + 4].copy()
+    arena[slots, FLOW_OFFSET : FLOW_OFFSET + 4] = (
+        arena[slots, FLOW_OFFSET + 4 : FLOW_OFFSET + 8])
+    arena[slots, FLOW_OFFSET + 4 : FLOW_OFFSET + 8] = src
+
+
+def l2fwd_echo_vec(pool: PacketPool, slots: np.ndarray,
+                   lengths: Optional[np.ndarray] = None) -> None:
+    """Burst variant of :func:`l2fwd_echo` (macs + flow IPs swapped)."""
+    swap_macs_vec(pool, slots, lengths)
+    swap_flow_ips_vec(pool, slots, lengths)
 
 
 @dataclass

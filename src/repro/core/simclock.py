@@ -163,8 +163,11 @@ class Wire:
 
     def transmit_burst(self, t_ns: int, lengths) -> np.ndarray:
         """Vectorized :meth:`transmit` for a back-to-back frame burst handed
-        to the wire at ``t_ns``; returns the per-frame arrival times."""
+        to the wire at ``t_ns``; returns the per-frame arrival times.  An
+        empty burst returns an empty array and leaves the wire untouched."""
         n = len(lengths)
+        if n == 0:
+            return np.empty(0, dtype=np.int64)
         start = max(int(t_ns), self.busy_until_ns)
         if self.gbps <= 0.0:
             self.busy_until_ns = start

@@ -1,0 +1,195 @@
+"""Output-queued switch model — the multi-host fabric.
+
+The paper's testbed faces the load generator at a single simulated host; the
+scale-out direction (gem5 stdlib's dist-gem5 topologies, SimBricks-style
+composition of independently-built node models) needs a fabric that connects
+*several* hosts' NICs on one shared virtual clock.  This module is that
+fabric: an output-queued Ethernet switch whose ports carry independently
+modeled full-duplex links.
+
+Model (per port):
+
+* **ingress wire** — endpoint → switch: a frame handed to :meth:`Switch.send`
+  at ``t`` pays serialization + propagation on its port's uplink
+  (:class:`~repro.core.simclock.Wire` FIFO semantics) before it reaches the
+  forwarding logic.
+* **forwarding** — on arrival the switch reads the frame's destination
+  address (the flow dst_ip the load generator writes and RSS hashes —
+  :func:`~repro.core.packet.read_dst_ip`) and looks it up in a
+  longest-prefix-match route table.  Unroutable frames are dropped and
+  counted.
+* **egress queue** — each egress port owns a bounded drop-tail buffer in
+  front of its egress wire.  A frame enqueues if fewer than ``capacity``
+  frames are queued-or-serializing, serializes FIFO at the wire's rate, and
+  lands at the endpoint ``latency_ns`` later; otherwise it is **dropped at
+  the switch** — the loss mechanism of every incast workload, distinct from
+  NIC-side ring overflow (``imissed``) and pool exhaustion (``rx_nombuf``).
+
+Frames on the fabric are raw byte arrays (copies), never pool slots: each
+node owns a private :class:`~repro.core.packet.PacketPool`, exactly like
+SimBricks peers own private memory, so crossing the fabric serializes out of
+one arena and DMAs into another.
+
+All timing runs through one :class:`~repro.core.simclock.EventScheduler` on
+the shared :class:`~repro.core.simclock.SimClock` — two events per egress
+frame (serialization end frees the buffer slot; arrival delivers to the
+endpoint sink), one per ingress frame.  Deterministic: FIFO tie-breaks in the
+scheduler plus insertion-ordered route/port structures make two runs of the
+same topology bit-identical.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .packet import read_dst_ip
+from .simclock import EventScheduler, Wire
+
+# an endpoint's delivery sink: (frame bytes, arrival time in virtual ns).
+# The scheduler has already advanced the clock to the arrival time.
+Sink = Callable[[np.ndarray, int], None]
+
+
+class SwitchPort:
+    """One full-duplex switch port: uplink + egress wire + bounded buffer."""
+
+    __slots__ = ("port_id", "ingress", "egress", "capacity", "sink",
+                 "occupancy", "occ_high", "rx_frames", "tx_frames",
+                 "tx_bytes", "egress_enqueued", "egress_drops")
+
+    def __init__(self, port_id: int, gbps: float, latency_ns: int,
+                 capacity: int):
+        if capacity < 1:
+            raise ValueError("egress capacity must be >= 1 frame")
+        self.port_id = port_id
+        self.ingress = Wire(gbps=gbps, latency_ns=latency_ns)
+        self.egress = Wire(gbps=gbps, latency_ns=latency_ns)
+        self.capacity = capacity
+        self.sink: Optional[Sink] = None
+        # occupancy counts frames enqueued-or-serializing on the egress side
+        self.occupancy = 0
+        self.occ_high = 0
+        self.rx_frames = 0          # frames that entered the switch here
+        self.tx_frames = 0          # frames delivered out of this port
+        self.tx_bytes = 0
+        self.egress_enqueued = 0
+        self.egress_drops = 0       # drop-tail: egress buffer full
+
+
+class Switch:
+    """N-port output-queued switch over one shared :class:`EventScheduler`.
+
+    Endpoints (node NICs, fabric-attached load generators) are wired with
+    :meth:`attach`; addresses with :meth:`add_route` (longest-prefix match,
+    so a node gets a /32 and a generator's client space a /16).  Frames enter
+    with :meth:`send`; every hop after that is an event on the scheduler.
+    """
+
+    def __init__(self, n_ports: int, sched: EventScheduler,
+                 gbps: float = 100.0, latency_ns: int = 1_000,
+                 egress_capacity: int = 64):
+        if n_ports < 1:
+            raise ValueError("a switch needs at least one port")
+        self.sched = sched
+        self.ports: List[SwitchPort] = [
+            SwitchPort(i, gbps, latency_ns, egress_capacity)
+            for i in range(n_ports)
+        ]
+        # (prefix_len, ip, mask) -> port, kept sorted longest-prefix-first
+        self._routes: List[Tuple[int, int, int, int]] = []
+        self._route_cache: Dict[int, Optional[int]] = {}
+        self.unrouted = 0           # frames with no matching route
+
+    @property
+    def n_ports(self) -> int:
+        return len(self.ports)
+
+    # -- control plane --------------------------------------------------------
+    def attach(self, port_id: int, sink: Sink) -> None:
+        """Wire an endpoint's delivery sink to a port."""
+        self.ports[port_id].sink = sink
+
+    def add_route(self, dst_ip: int, port_id: int, prefix_len: int = 32) -> None:
+        """Route ``dst_ip/prefix_len`` out of ``port_id`` (LPM on lookup)."""
+        if not 0 <= port_id < len(self.ports):
+            raise ValueError(f"port {port_id} out of range [0, {len(self.ports)})")
+        if not 0 <= prefix_len <= 32:
+            raise ValueError("prefix_len must be in [0, 32]")
+        mask = 0 if prefix_len == 0 else (0xFFFFFFFF << (32 - prefix_len)) & 0xFFFFFFFF
+        self._routes.append((prefix_len, int(dst_ip) & mask, mask, port_id))
+        # longest prefix first; insertion order breaks ties deterministically
+        self._routes.sort(key=lambda r: -r[0])
+        self._route_cache.clear()
+
+    def lookup(self, dst_ip: int) -> Optional[int]:
+        """Longest-prefix-match route lookup (None == unroutable)."""
+        dst_ip = int(dst_ip)
+        if dst_ip in self._route_cache:
+            return self._route_cache[dst_ip]
+        out: Optional[int] = None
+        for _plen, ip, mask, port_id in self._routes:
+            if (dst_ip & mask) == ip:
+                out = port_id
+                break
+        self._route_cache[dst_ip] = out
+        return out
+
+    # -- data plane -----------------------------------------------------------
+    def send(self, port_id: int, frame: np.ndarray,
+             t_ns: Optional[int] = None) -> None:
+        """An endpoint hands one frame to its port at ``t_ns`` (default: the
+        clock's now).  The frame pays the uplink's serialization +
+        propagation, then forwards on arrival at the switch."""
+        port = self.ports[port_id]
+        t = self.sched.clock.now_ns if t_ns is None else int(t_ns)
+        arrival = port.ingress.transmit(t, len(frame))
+        self.sched.schedule_at(arrival, lambda: self._forward(port_id, frame))
+
+    def _forward(self, in_port_id: int, frame: np.ndarray) -> None:
+        """Ingress arrival: route on the frame's dst address, enqueue egress."""
+        self.ports[in_port_id].rx_frames += 1
+        out_id = self.lookup(read_dst_ip(frame))
+        if out_id is None:
+            self.unrouted += 1
+            return
+        out = self.ports[out_id]
+        if out.occupancy >= out.capacity:
+            out.egress_drops += 1   # drop-tail: the incast loss mechanism
+            return
+        out.occupancy += 1
+        out.occ_high = max(out.occ_high, out.occupancy)
+        out.egress_enqueued += 1
+        nbytes = len(frame)
+        now = self.sched.clock.now_ns
+        arrival = out.egress.transmit(now, nbytes)
+        ser_end = arrival - out.egress.latency_ns
+        # the buffer slot frees when serialization completes (the frame has
+        # left the switch), not when the frame lands after propagation
+        self.sched.schedule_at(ser_end, lambda: self._egress_done(out))
+        self.sched.schedule_at(arrival, lambda: self._deliver(out, frame, arrival))
+
+    def _egress_done(self, port: SwitchPort) -> None:
+        port.occupancy -= 1
+
+    def _deliver(self, port: SwitchPort, frame: np.ndarray,
+                 arrival_ns: int) -> None:
+        port.tx_frames += 1
+        port.tx_bytes += len(frame)
+        if port.sink is not None:
+            port.sink(frame, arrival_ns)
+
+    # -- telemetry ------------------------------------------------------------
+    @property
+    def egress_drops(self) -> int:
+        """Total frames lost to full egress buffers, all ports."""
+        return sum(p.egress_drops for p in self.ports)
+
+    def extras(self, prefix: str = "sw") -> Dict[str, float]:
+        """Per-port drop/occupancy counters, RunReport.extras-shaped."""
+        out: Dict[str, float] = {f"{prefix}_unrouted": float(self.unrouted)}
+        for p in self.ports:
+            out[f"{prefix}_p{p.port_id}_egress_drops"] = float(p.egress_drops)
+            out[f"{prefix}_p{p.port_id}_egress_forwarded"] = float(p.tx_frames)
+            out[f"{prefix}_p{p.port_id}_occ_high"] = float(p.occ_high)
+        return out

@@ -199,8 +199,14 @@ class ThroughputMeter:
 
     @property
     def elapsed_s(self) -> float:
-        if self.start_ns is None or self.end_ns is None or self.end_ns <= self.start_ns:
+        if self.start_ns is None or self.end_ns is None:
             return 0.0
+        if self.end_ns <= self.start_ns:
+            # degenerate window: every completion landed on one clock tick
+            # (e.g. a single packet published by a terminal writeback flush).
+            # Measure over the 1 ns tick floor instead of claiming the run
+            # moved zero traffic.
+            return 1e-9 if self.packets > 0 else 0.0
         return (self.end_ns - self.start_ns) / 1e9
 
     @property

@@ -1,13 +1,19 @@
 # Declarative experiment layer: frozen configs -> Testbed -> RunReport.
 # The API every scenario (benchmark, example, future PR) builds on.
-from .config import (CostConfig, ExperimentConfig, LinkConfig, PoolConfig,
-                     PortConfig, RssConfig, StackConfig, TrafficConfig)
-from .runner import make_server_factory, run_experiment, run_testbed
-from .testbed import Testbed, register_stack, stack_kinds
+# Multi-host scenarios: TopologyConfig -> Cluster -> RunReport.
+from .config import (CostConfig, ExperimentConfig, LinkConfig, NodeConfig,
+                     PoolConfig, PortConfig, RssConfig, StackConfig,
+                     SwitchConfig, TopologyConfig, TrafficConfig)
+from .runner import (make_server_factory, run_experiment,
+                     run_topology_experiment, run_testbed)
+from .testbed import Testbed, build_stack, register_stack, stack_kinds
+from .topology import Client, Cluster, Node
 
 __all__ = [
-    "CostConfig", "ExperimentConfig", "LinkConfig", "PoolConfig", "PortConfig",
-    "RssConfig", "StackConfig", "TrafficConfig",
-    "Testbed", "make_server_factory", "register_stack", "run_experiment",
-    "run_testbed", "stack_kinds",
+    "Client", "Cluster", "CostConfig", "ExperimentConfig", "LinkConfig",
+    "Node", "NodeConfig", "PoolConfig", "PortConfig",
+    "RssConfig", "StackConfig", "SwitchConfig", "TopologyConfig",
+    "TrafficConfig",
+    "Testbed", "build_stack", "make_server_factory", "register_stack",
+    "run_experiment", "run_testbed", "run_topology_experiment", "stack_kinds",
 ]

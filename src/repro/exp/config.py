@@ -313,3 +313,122 @@ class ExperimentConfig:
 
     def with_ports(self, **kw: Any) -> "ExperimentConfig":
         return replace(self, ports=tuple(replace(p, **kw) for p in self.ports))
+
+
+# -- multi-host topologies ----------------------------------------------------
+
+@dataclass(frozen=True)
+class SwitchConfig:
+    """The fabric: an output-queued switch whose ports all carry ``link``
+    (full duplex) and buffer at most ``egress_capacity`` frames per egress
+    port (drop-tail — the incast loss mechanism)."""
+
+    egress_capacity: int = 64
+    link: LinkConfig = field(default_factory=LinkConfig)
+
+    def __post_init__(self) -> None:
+        if self.egress_capacity < 1:
+            raise ValueError("egress_capacity must be >= 1 frame")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _config_to_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "SwitchConfig":
+        d = dict(d)
+        d["link"] = LinkConfig.from_dict(d.get("link", {}))
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class NodeConfig:
+    """One simulated host on the fabric: its own packet arena, one NIC, and
+    a server stack.  ``ip`` is the node's address on the fabric (what the
+    switch routes on); 0 auto-assigns ``192.168.0.(index+1)`` at build time.
+    The NIC's own ``PortConfig.link`` is ignored in a topology — the switch
+    port's wires carry the link timing."""
+
+    name: str = "node"
+    ip: int = 0
+    pool: PoolConfig = field(default_factory=PoolConfig)
+    port: PortConfig = field(default_factory=PortConfig)
+    stack: StackConfig = field(default_factory=StackConfig)
+
+    def __post_init__(self) -> None:
+        if not 0 <= self.ip <= 0xFFFFFFFF:
+            raise ValueError("ip must be a u32 (0 == auto-assign)")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _config_to_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "NodeConfig":
+        d = dict(d)
+        d["pool"] = PoolConfig.from_dict(d.get("pool", {}))
+        d["port"] = PortConfig.from_dict(d.get("port", {}))
+        d["stack"] = StackConfig.from_dict(d.get("stack", {}))
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class TopologyConfig:
+    """One complete multi-host scenario: N server nodes and N fabric-attached
+    load-generator clients around one switch, all on one shared SimClock.
+
+    ``traffic`` describes each client's *individual* offered load (mode must
+    be ``open_loop`` and ``sim_time`` must stay on — topologies are a
+    virtual-time construction); client ``g`` derives its emission schedule
+    from ``traffic.seed + g``, so the scenario stays deterministic while
+    clients stay decorrelated.  ``target`` names the node all clients send to
+    ("" == the first node) — the N:1 shape of an incast.
+    """
+
+    name: str = "topology"
+    nodes: Tuple[NodeConfig, ...] = (NodeConfig(),)
+    n_clients: int = 1
+    client_pool: PoolConfig = field(default_factory=lambda: PoolConfig(n_slots=4096))
+    switch: SwitchConfig = field(default_factory=SwitchConfig)
+    traffic: TrafficConfig = field(default_factory=TrafficConfig)
+    target: str = ""
+
+    def __post_init__(self) -> None:
+        if not self.nodes:
+            raise ValueError("need at least one node")
+        if not 1 <= self.n_clients <= 255:
+            raise ValueError("n_clients must be in [1, 255] (one /16 each)")
+        if self.traffic.packet_size > self.client_pool.slot_size:
+            raise ValueError("packet_size exceeds the client pool slot size")
+        for n in self.nodes:
+            if self.traffic.packet_size > n.pool.slot_size:
+                raise ValueError(
+                    f"packet_size exceeds node {n.name!r} pool slot size")
+        names = [n.name for n in self.nodes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"node names must be unique, got {names}")
+        ips = [n.ip for n in self.nodes if n.ip != 0]
+        if len(set(ips)) != len(ips):
+            raise ValueError("explicit node ips must be unique")
+        if self.target and self.target not in names:
+            raise ValueError(f"target {self.target!r} is not a node name")
+        if self.traffic.mode != "open_loop":
+            raise ValueError("topology traffic mode must be open_loop")
+        if not self.traffic.sim_time:
+            raise ValueError("topologies run in virtual time (sim_time=True)")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _config_to_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "TopologyConfig":
+        d = dict(d)
+        d["nodes"] = tuple(NodeConfig.from_dict(n) for n in d.get("nodes", [{}]))
+        d["client_pool"] = PoolConfig.from_dict(d.get("client_pool", {}))
+        d["switch"] = SwitchConfig.from_dict(d.get("switch", {}))
+        d["traffic"] = TrafficConfig.from_dict(d.get("traffic", {}))
+        return cls(**d)
+
+    def with_traffic(self, **kw: Any) -> "TopologyConfig":
+        return replace(self, traffic=replace(self.traffic, **kw))
+
+    def with_switch(self, **kw: Any) -> "TopologyConfig":
+        return replace(self, switch=replace(self.switch, **kw))

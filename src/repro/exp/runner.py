@@ -19,8 +19,9 @@ import numpy as np
 from repro.core import (EthDev, NetworkStack, RunReport, TrafficPattern,
                         find_max_sustainable_bandwidth)
 
-from .config import ExperimentConfig
+from .config import ExperimentConfig, TopologyConfig
 from .testbed import Testbed
+from .topology import Cluster
 
 
 def make_server_factory(
@@ -83,3 +84,10 @@ def run_experiment(cfg: ExperimentConfig) -> RunReport:
     rep.extras["msb_gbps"] = gbps
     rep.extras["msb_trials"] = float(len(reports))
     return rep
+
+
+def run_topology_experiment(cfg: TopologyConfig) -> RunReport:
+    """Build + run one multi-host topology (N clients → switch → nodes, one
+    shared SimClock) from config alone; the merged RunReport carries
+    per-switch-port drop/occupancy telemetry in ``extras``."""
+    return Cluster.build(cfg).run()

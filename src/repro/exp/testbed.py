@@ -35,6 +35,15 @@ def stack_kinds() -> List[str]:
     return sorted(_STACKS)
 
 
+def build_stack(cfg: StackConfig, devs: Sequence[EthDev]) -> NetworkStack:
+    """Resolve ``cfg.kind`` through the registry and build the server — the
+    one lookup point shared by :class:`Testbed` and the topology builder."""
+    if cfg.kind not in _STACKS:
+        raise ValueError(
+            f"unknown stack kind {cfg.kind!r}; registered: {stack_kinds()}")
+    return _STACKS[cfg.kind](cfg, devs)
+
+
 @register_stack("bypass")
 def _build_bypass(cfg: StackConfig, devs: Sequence[EthDev]) -> NetworkStack:
     plan = (BurstPlan(per_lcore=cfg.per_lcore_bursts)
@@ -83,10 +92,6 @@ class Testbed:
 
     @classmethod
     def build(cls, cfg: ExperimentConfig) -> "Testbed":
-        if cfg.stack.kind not in _STACKS:
-            raise ValueError(
-                f"unknown stack kind {cfg.stack.kind!r}; "
-                f"registered: {stack_kinds()}")
         pool = PacketPool(cfg.pool.n_slots, cfg.pool.slot_size)
         devs: List[EthDev] = []
         for dev_id, pc in enumerate(cfg.ports):
@@ -99,7 +104,7 @@ class Testbed:
                                    writeback_threshold=pc.writeback_threshold)
                 dev.tx_queue_setup(q, pc.ring_size)
             devs.append(dev.dev_start())
-        server = _STACKS[cfg.stack.kind](cfg.stack, devs)
+        server = build_stack(cfg.stack, devs)
         clock: Optional[SimClock] = None
         if cfg.traffic.sim_time:
             # one virtual clock per testbed: the loadgen advances it, the

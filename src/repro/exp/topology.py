@@ -1,0 +1,322 @@
+"""Multi-host topology builder + driver: N node testbeds and N fabric-attached
+load-generator clients around one :class:`~repro.core.switch.Switch`, all on
+ONE shared :class:`~repro.core.simclock.SimClock`.
+
+This is the SimBricks-style composition the ROADMAP called for: every node is
+an independently-built model (its own :class:`~repro.core.packet.PacketPool`,
+its own :class:`~repro.core.ethdev.EthDev`, its own server stack from the
+same registry single-host testbeds use), and the pieces meet only on the
+fabric — frames cross between address spaces as byte copies over modeled
+wires, and all timing runs through one
+:class:`~repro.core.simclock.EventScheduler`.
+
+The traffic shape is client/server: each client is a
+:class:`~repro.core.loadgen.LoadGen` attached to a switch port through the
+fabric primitives (``make_frame``/``complete_frame``), addressing one target
+node (``TopologyConfig.target``).  The target's stack echoes each frame back
+to its sender (macs + flow IPs swapped), so every client measures true
+four-hop RTTs: uplink → switch egress queue → server NIC/stack → and the
+same in reverse.  With N clients this is the classic **incast**: the switch
+egress port facing the target saturates first, and losses show up in the
+*switch's* per-port drop counters while every NIC stays loss-free —
+exactly the observable the incast benchmark asserts.
+
+Determinism: one clock, FIFO event tie-breaks, per-client seeds derived as
+``traffic.seed + client_index``, and insertion-ordered build/dispatch loops —
+the same ``TopologyConfig`` produces a bit-identical ``RunReport`` every run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.core import (EthConf, EthDev, EventScheduler, LatencyRecorder,
+                        LoadGen, NetworkStack, PacketPool, RunReport,
+                        SimClock, Switch, ThroughputMeter, TrafficPattern)
+from repro.core.packet import (l2fwd_echo, l2fwd_echo_vec, swap_macs,
+                               swap_macs_vec)
+
+from .config import CostConfig, NodeConfig, TopologyConfig
+from .testbed import build_stack
+
+CLIENT_IP_BASE = 0x0A000000   # client g owns 10.(g+1).0.0/16 on the fabric
+NODE_AUTO_IP_BASE = 0xC0A80001  # auto-assigned node i: 192.168.0.(i+1)
+
+
+@dataclass
+class Node:
+    """One live simulated host: private arena, one NIC, a server stack, and
+    the switch port it hangs off."""
+
+    cfg: NodeConfig
+    ip: int
+    pool: PacketPool
+    dev: EthDev
+    server: NetworkStack
+    port_id: int
+
+
+@dataclass
+class Client:
+    """One fabric-attached load generator and its private buffer arena."""
+
+    lg: LoadGen
+    pool: PacketPool
+    port_id: int
+    seed: int
+
+
+def _node_sink(node: Node) -> Callable[[np.ndarray, int], None]:
+    """Switch egress → node NIC: DMA the wire bytes into the node's private
+    arena and deliver through the normal NIC path (RSS steering, ring
+    overflow drops, writeback thresholds all apply)."""
+    pool, dev = node.pool, node.dev
+
+    def sink(frame: np.ndarray, t_ns: int) -> None:
+        slot = pool.alloc()
+        if slot is None:
+            return  # arena exhausted: the dev's rx_nombuf counter records it
+        n = len(frame)
+        pool.arena[slot, :n] = frame
+        pool.lengths[slot] = n
+        dev.deliver(slot, n)
+
+    return sink
+
+
+def _client_sink(client: Client) -> Callable[[np.ndarray, int], None]:
+    """Switch egress → client: the reply is home; record RTT at arrival."""
+
+    def sink(frame: np.ndarray, t_ns: int) -> None:
+        client.lg.complete_frame(frame, t_ns)
+
+    return sink
+
+
+class Cluster:
+    """Live multi-host scenario built from one :class:`TopologyConfig`."""
+
+    def __init__(self, cfg: TopologyConfig, clock: SimClock,
+                 sched: EventScheduler, switch: Switch, nodes: List[Node],
+                 clients: List[Client]):
+        self.cfg = cfg
+        self.clock = clock
+        self.sched = sched
+        self.switch = switch
+        self.nodes = nodes
+        self.clients = clients
+
+    @classmethod
+    def build(cls, cfg: TopologyConfig) -> "Cluster":
+        clock = SimClock()
+        sched = EventScheduler(clock)
+        switch = Switch(len(cfg.nodes) + cfg.n_clients, sched,
+                        gbps=cfg.switch.link.gbps,
+                        latency_ns=cfg.switch.link.latency_ns,
+                        egress_capacity=cfg.switch.egress_capacity)
+        # resolve node addresses up front so collisions fail loudly instead
+        # of silently shadowing a route (stable LPM sort keeps first-added)
+        ips = [nc.ip if nc.ip else NODE_AUTO_IP_BASE + i
+               for i, nc in enumerate(cfg.nodes)]
+        if len(set(ips)) != len(ips):
+            raise ValueError(
+                f"resolved node ips collide: {[hex(ip) for ip in ips]}; "
+                "auto-assignment uses 192.168.0.(index+1) — pick explicit "
+                "ips outside that range")
+        for ip in ips:
+            if any(ip & 0xFFFF0000 == CLIENT_IP_BASE | ((g + 1) << 16)
+                   for g in range(cfg.n_clients)):
+                raise ValueError(
+                    f"node ip {hex(ip)} falls inside a client /16 "
+                    f"(10.1.0.0 .. 10.{cfg.n_clients}.255.255); replies to "
+                    "that client would be shadowed")
+        nodes: List[Node] = []
+        for i, nc in enumerate(cfg.nodes):
+            ip = ips[i]
+            pool = PacketPool(nc.pool.n_slots, nc.pool.slot_size)
+            # the node NIC's own link is ideal: the switch port's wires carry
+            # all link timing for this host
+            dev = EthDev(pool, dev_id=i).configure(EthConf(
+                n_rx_queues=nc.port.n_queues, n_tx_queues=nc.port.n_queues,
+                rss_key=nc.port.rss.key,
+                rss_table_size=nc.port.rss.table_size))
+            for q in range(nc.port.n_queues):
+                dev.rx_queue_setup(
+                    q, nc.port.ring_size,
+                    writeback_threshold=nc.port.writeback_threshold)
+                dev.tx_queue_setup(q, nc.port.ring_size)
+            dev.dev_start()
+            server = build_stack(nc.stack, [dev])
+            if hasattr(server, "attach_clock"):
+                cost = nc.stack.cost if nc.stack.cost is not None else CostConfig()
+                server.attach_clock(clock, cost.to_host_cost_model())
+            # a switched fabric needs replies re-addressed to their sender:
+            # upgrade the stock L2Fwd transform to the echo variant (custom
+            # process fns registered by scenario stacks are left alone)
+            if getattr(server, "burst_process_fn", None) is swap_macs_vec:
+                server.burst_process_fn = l2fwd_echo_vec
+            if getattr(server, "process_fn", None) is swap_macs:
+                server.process_fn = l2fwd_echo
+            node = Node(cfg=nc, ip=ip, pool=pool, dev=dev, server=server,
+                        port_id=i)
+            switch.attach(i, _node_sink(node))
+            switch.add_route(ip, i, prefix_len=32)
+            nodes.append(node)
+        target_name = cfg.target or cfg.nodes[0].name
+        target_ip = next(n.ip for n in nodes if n.cfg.name == target_name)
+        t = cfg.traffic
+        clients: List[Client] = []
+        for g in range(cfg.n_clients):
+            port_id = len(nodes) + g
+            pool = PacketPool(cfg.client_pool.n_slots, cfg.client_pool.slot_size)
+            src_base = CLIENT_IP_BASE | ((g + 1) << 16)
+            lg = LoadGen([], ts_offset=t.ts_offset,
+                         verify_integrity=t.verify_integrity,
+                         max_tx_burst=t.max_tx_burst, n_flows=t.n_flows,
+                         src_ip_base=src_base, dst_ip=target_ip)
+            client = Client(lg=lg, pool=pool, port_id=port_id,
+                            seed=t.seed + g)
+            switch.attach(port_id, _client_sink(client))
+            switch.add_route(src_base, port_id, prefix_len=16)
+            clients.append(client)
+        return cls(cfg, clock, sched, switch, nodes, clients)
+
+    # -- driver ---------------------------------------------------------------
+    def run(self, duration_s: Optional[float] = None,
+            max_rounds: int = 50_000_000) -> RunReport:
+        """Drive the whole cluster event-by-event in virtual time.
+
+        Per round: due client emissions enter the fabric (stamped with their
+        *scheduled* times), due fabric events fire (wire arrivals, egress
+        completions, deliveries into NICs and clients), every node gets one
+        scheduling round at virtual now and its TX drains back onto the
+        fabric, then the clock advances to the earliest pending event.
+        """
+        t = self.cfg.traffic
+        dur_ns = int((t.duration_s if duration_s is None else duration_s) * 1e9)
+        clock, sched = self.clock, self.sched
+        start = clock.now_ns
+        # per-client analytic schedules: [times, sizes, cursor, rng]
+        scheds: List[list] = []
+        for client in self.clients:
+            pattern = TrafficPattern(
+                rate_gbps=t.rate_gbps, packet_size=t.packet_size, kind=t.kind,
+                burst_len=t.burst_len, seed=client.seed)
+            rng = np.random.default_rng(client.seed)
+            times, sizes = pattern.emission_schedule(dur_ns, rng)
+            if len(times):
+                times = times + start
+                client.lg.meter.open_window(int(times[0]))
+            scheds.append([times, sizes, 0, rng])
+        flushed_idle = False
+        for _ in range(max_rounds):
+            now = clock.now_ns
+            moved = 0
+            # 1) due emissions, client order then time order (deterministic)
+            for client, st in zip(self.clients, scheds):
+                times, sizes, i, rng = st
+                n = len(times)
+                while i < n and times[i] <= now:
+                    t_emit = int(times[i])
+                    frame = client.lg.make_frame(
+                        client.pool, int(sizes[i]), t_emit,
+                        rng if t.verify_integrity else None)
+                    if frame is not None:
+                        self.switch.send(client.port_id, frame, t_ns=t_emit)
+                    i += 1
+                    moved += 1
+                st[2] = i
+            # 2) fabric events due at now
+            moved += sched.run_until(now)
+            # 3) one scheduling round per node; TX drains onto the fabric
+            for node in self.nodes:
+                moved += node.server.poll_at(now)
+                moved += self._drain_node_tx(node, now)
+            # 4) advance to the next event
+            cands: List[int] = []
+            for st in scheds:
+                if st[2] < len(st[0]):
+                    cands.append(int(st[0][st[2]]))
+            nt = sched.next_time_ns()
+            if nt is not None:
+                cands.append(nt)
+            for node in self.nodes:
+                nf = node.server.next_free_ns(now)
+                if nf is not None:
+                    cands.append(nf)
+            if cands:
+                flushed_idle = False
+                clock.advance_to(min(cands))
+                continue
+            if moved > 0:
+                flushed_idle = False
+                continue
+            if not flushed_idle:
+                # quiet fabric: NIC timeout-driven descriptor writebacks fire
+                for node in self.nodes:
+                    node.dev.flush_rx()
+                flushed_idle = True
+                continue
+            break  # nothing scheduled, nothing moving: remaining == drops
+        else:
+            raise RuntimeError(
+                f"Cluster.run exceeded max_rounds={max_rounds} without "
+                "quiescing — a node stack is likely re-addressing frames to "
+                "itself (echo must swap flow IPs) or traffic never drains")
+        return self._report(start)
+
+    def _drain_node_tx(self, node: Node, now_ns: int) -> int:
+        """Node NIC TX → fabric: serialize each reply out of the node's arena
+        and hand it to the node's switch port."""
+        slots, lengths = node.dev.drain_tx_bursts(self.cfg.traffic.max_tx_burst)
+        n = len(slots)
+        for k in range(n):
+            slot = int(slots[k])
+            frame = node.pool.view(slot, int(lengths[k])).copy()
+            node.pool.free(slot)
+            self.switch.send(node.port_id, frame, t_ns=now_ns)
+        return n
+
+    # -- reporting ------------------------------------------------------------
+    def _report(self, start_ns: int) -> RunReport:
+        """Merge every client's telemetry into one RunReport, with per-switch-
+        port drop/occupancy counters and per-node NIC counters in extras."""
+        t = self.cfg.traffic
+        sent = sum(c.lg.flight.sent for c in self.clients)
+        received = sum(c.lg.flight.received for c in self.clients)
+        lat = LatencyRecorder()
+        for c in self.clients:
+            vals = c.lg.latency.values()
+            if len(vals):
+                lat.record_many(vals)
+        meter = ThroughputMeter()
+        for c in self.clients:
+            m = c.lg.meter
+            if m.start_ns is not None and m.end_ns is not None:
+                meter.merge_counts(m.packets, m.bytes, m.start_ns, m.end_ns)
+        rep = RunReport(
+            offered_gbps=t.rate_gbps * len(self.clients),
+            achieved_gbps=meter.gbps,
+            achieved_mpps=meter.mpps,
+            sent=sent,
+            received=received,
+            dropped=sent - received,
+            latency=lat.stats(),
+            histogram=lat.histogram(),
+        )
+        rep.extras["sim_time"] = 1.0
+        rep.extras["virtual_elapsed_ns"] = float(self.clock.now_ns - start_ns)
+        rep.extras["integrity_errors"] = float(
+            sum(c.lg.flight.integrity_errors for c in self.clients))
+        for gi, c in enumerate(self.clients):
+            rep.extras[f"g{gi}_sent"] = float(c.lg.flight.sent)
+            rep.extras[f"g{gi}_received"] = float(c.lg.flight.received)
+        for ni, node in enumerate(self.nodes):
+            st = node.dev.stats()
+            rep.extras[f"n{ni}_rx_packets"] = float(st.ipackets)
+            rep.extras[f"n{ni}_imissed"] = float(st.imissed)
+            rep.extras[f"n{ni}_rx_nombuf"] = float(st.rx_nombuf)
+        rep.extras.update(self.switch.extras())
+        return rep

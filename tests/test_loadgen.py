@@ -96,6 +96,55 @@ def test_msb_search_finds_sustainable_rate():
     # the reported MSB trial itself had no drops
     ok_trials = [r for r in reports if r.drop_pct == 0 and r.sent > 0]
     assert ok_trials, "at least one sustainable trial"
+    # the reported MSB is an offered rate that was actually probed & sustained
+    assert any(r.offered_gbps == pytest.approx(msb) and r.drop_pct == 0
+               for r in reports)
+
+
+def test_msb_first_trial_failure_probes_lo_before_refining():
+    """Regression: when the very first ramp trial fails, the search used to
+    bisect [start/2, start] without ever validating the lower bound as
+    sustainable (and could report 0 or an unprobed rate).  It must probe
+    downward first, then refine between validated-good and failing rates.
+
+    The system under test saturates physically: a 5 Gbps wire behind a small
+    pool, so offering 8 Gbps backs the pool up into drops while anything at
+    or below line rate sustains.
+    """
+    cost = HostCostModel(interrupt_cycles=0, syscall_cycles=0,
+                         per_packet_kernel_cycles=0, pmd_poll_cycles=0,
+                         pmd_per_packet_cycles=0)
+
+    def mk():
+        pool, ports = _setup(pool_slots=2048, ring=1024, link_gbps=5.0)
+        return _sim_server(ports, cost=cost, burst_size=64), ports
+
+    msb, reports = find_max_sustainable_bandwidth(
+        mk, trial_s=0.02, refine_iters=2, start_gbps=8.0, max_gbps=64.0)
+    assert reports[0].drop_pct > 0, "premise: the first ramp trial fails"
+    assert 4.0 <= msb < 8.0
+    # every reported-sustainable bound was actually probed
+    assert any(r.offered_gbps == pytest.approx(msb) and r.drop_pct == 0
+               for r in reports)
+
+
+def test_msb_nothing_sustainable_returns_zero():
+    """A system that drops at every probed rate must report 0, not an
+    unvalidated bisection floor."""
+    class DeadServer:
+        def poll_once(self):
+            return 0
+
+    def mk():
+        pool = PacketPool(64, 1518)
+        ports = [Port.make(pool, ring_size=8, writeback_threshold=8,
+                           link_gbps=100.0)]
+        return DeadServer(), ports
+
+    msb, reports = find_max_sustainable_bandwidth(
+        mk, trial_s=0.005, refine_iters=3, start_gbps=1.0, sim_time=True)
+    assert msb == 0.0
+    assert all(not (r.drop_pct == 0 and r.sent > 0) for r in reports)
 
 
 def test_trace_replay():

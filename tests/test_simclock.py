@@ -55,6 +55,19 @@ def test_wire_serialization_and_fifo_queueing():
     assert ideal.transmit(7, 9000) == 7
 
 
+def test_wire_transmit_burst_empty_burst():
+    """Regression: an empty burst used to raise IndexError (ends[-1]) on a
+    rate-limited wire; it must return an empty array and leave the wire
+    untouched."""
+    w = Wire(gbps=10.0, latency_ns=500)
+    w.transmit(0, 1250)  # wire busy until 1000
+    out = w.transmit_burst(100, [])
+    assert out.dtype == np.int64 and len(out) == 0
+    assert w.busy_until_ns == 1000
+    ideal = Wire(gbps=0.0, latency_ns=0)
+    assert len(ideal.transmit_burst(0, np.empty(0, dtype=np.int32))) == 0
+
+
 # -- analytic emission schedules ----------------------------------------------
 
 def test_uniform_schedule_exact_spacing():
@@ -99,6 +112,22 @@ def test_trace_schedule_replays_within_duration():
     times, sizes = p.emission_schedule(10_000)
     assert len(times) == 10
     assert list(sizes) == [128 + i for i in range(10)]
+
+
+def test_trace_schedule_sorts_out_of_order_entries():
+    """Regression: an out-of-order trace used to pass through unsorted,
+    violating the documented "times non-decreasing" contract and corrupting
+    run_sim's event loop and run's searchsorted credit."""
+    p = TrafficPattern(trace=[(5000, 128), (1000, 256), (1000, 300), (0, 64)])
+    times, sizes = p.emission_schedule(10_000)
+    assert list(times) == [0, 1000, 1000, 5000]
+    # stable: equal-time entries keep their input order
+    assert list(sizes) == [64, 256, 300, 128]
+
+
+def test_trace_schedule_rejects_negative_offsets():
+    with pytest.raises(ValueError, match=">= 0"):
+        TrafficPattern(trace=[(-1, 64)]).emission_schedule(10_000)
 
 
 # -- virtual-time runs --------------------------------------------------------

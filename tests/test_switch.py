@@ -1,0 +1,297 @@
+"""Multi-host Switch/Topology layer: switch units (LPM forwarding, FIFO
+egress, bounded drop-tail buffers), TopologyConfig round-tripping, and the
+headline scenario guarantees — bit-identical incast RunReports on one shared
+SimClock, losses attributed to the switch egress buffer (never the NICs), and
+an RTT tail that grows with client count."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import EventScheduler, Switch
+from repro.core.packet import MIN_FRAME, write_flow
+from repro.exp import (LinkConfig, NodeConfig, PoolConfig, PortConfig,
+                       StackConfig, SwitchConfig, TopologyConfig,
+                       TrafficConfig, Cluster, run_topology_experiment)
+
+
+def _frame(dst_ip: int, size: int = 1250) -> np.ndarray:
+    buf = np.zeros(max(size, MIN_FRAME), dtype=np.uint8)
+    write_flow(buf, 0x0A010001, dst_ip, 1024, 443)
+    return buf
+
+
+# -- switch units -------------------------------------------------------------
+
+def test_switch_longest_prefix_match_routing():
+    sw = Switch(3, EventScheduler(), gbps=0.0, latency_ns=0)
+    sw.add_route(0x0A010000, 1, prefix_len=16)   # 10.1.0.0/16
+    sw.add_route(0x0A010005, 2, prefix_len=32)   # 10.1.0.5/32 wins inside it
+    assert sw.lookup(0x0A010005) == 2
+    assert sw.lookup(0x0A017777) == 1
+    assert sw.lookup(0x0B000001) is None
+
+
+def test_switch_forwards_with_exact_wire_timing():
+    """One frame, port 0 -> port 1: uplink serialization + propagation to
+    reach the switch, then the same again on the egress side."""
+    sched = EventScheduler()
+    sw = Switch(2, sched, gbps=10.0, latency_ns=500)  # 1250B == 1000 ns
+    out = []
+    sw.attach(1, lambda frame, t: out.append((t, len(frame))))
+    sw.add_route(0xC0A80001, 1)
+    sw.send(0, _frame(0xC0A80001, 1250), t_ns=0)
+    sched.run_all()
+    # ingress arrival at 1500; egress serialization ends 2500, lands 3000
+    assert out == [(3000, 1250)]
+    assert sw.ports[0].rx_frames == 1
+    assert sw.ports[1].tx_frames == 1
+    assert sw.ports[1].occupancy == 0
+
+
+def test_switch_unrouted_frames_counted():
+    sched = EventScheduler()
+    sw = Switch(2, sched, gbps=0.0, latency_ns=0)
+    sw.send(0, _frame(0xDEADBEEF), t_ns=0)
+    sched.run_all()
+    assert sw.unrouted == 1
+    assert sw.ports[0].rx_frames == 1
+    assert sw.ports[1].tx_frames == 0
+
+
+def test_switch_bounded_egress_buffer_drops_tail():
+    """Two ingress ports converging on one egress at line rate: the egress
+    drains at half the aggregate arrival rate, occupancy hits the cap, and
+    the excess is dropped at the switch (drop-tail), FIFO preserved."""
+    sched = EventScheduler()
+    cap = 4
+    sw = Switch(3, sched, gbps=10.0, latency_ns=0, egress_capacity=cap)
+    out = []
+    sw.attach(2, lambda frame, t: out.append(t))
+    sw.add_route(0xC0A80001, 2)
+    n_each = 10
+    for i in range(n_each):  # back-to-back trains on both uplinks
+        sw.send(0, _frame(0xC0A80001, 1250), t_ns=0)
+        sw.send(1, _frame(0xC0A80001, 1250), t_ns=0)
+    sched.run_all()
+    port = sw.ports[2]
+    assert port.egress_drops > 0
+    assert port.egress_enqueued + port.egress_drops == 2 * n_each
+    assert len(out) == port.tx_frames == port.egress_enqueued
+    assert port.occ_high == cap
+    assert port.occupancy == 0
+    assert out == sorted(out)  # FIFO egress: non-decreasing arrivals
+
+
+def test_switch_validates_arguments():
+    sched = EventScheduler()
+    with pytest.raises(ValueError):
+        Switch(0, sched)
+    sw = Switch(2, sched)
+    with pytest.raises(ValueError):
+        sw.add_route(1, 5)
+    with pytest.raises(ValueError):
+        sw.add_route(1, 0, prefix_len=40)
+
+
+# -- topology configs ---------------------------------------------------------
+
+def _full_topology() -> TopologyConfig:
+    return TopologyConfig(
+        name="roundtrip",
+        nodes=(NodeConfig(name="a", ip=0xC0A80010,
+                          pool=PoolConfig(n_slots=2048),
+                          port=PortConfig(n_queues=2, ring_size=512,
+                                          writeback_threshold=8),
+                          stack=StackConfig(kind="bypass", burst_size=16)),
+               NodeConfig(name="b", stack=StackConfig(kind="kernel"))),
+        n_clients=3,
+        client_pool=PoolConfig(n_slots=1024),
+        switch=SwitchConfig(egress_capacity=16,
+                            link=LinkConfig(gbps=25.0, latency_ns=600)),
+        traffic=TrafficConfig(mode="open_loop", rate_gbps=2.0,
+                              packet_size=512, duration_s=0.0002, seed=9),
+        target="a")
+
+
+def test_topology_config_round_trip():
+    for cfg in (TopologyConfig(), _full_topology()):
+        assert TopologyConfig.from_dict(cfg.to_dict()) == cfg
+
+
+def test_topology_config_survives_json():
+    cfg = _full_topology()
+    assert TopologyConfig.from_dict(
+        json.loads(json.dumps(cfg.to_dict()))) == cfg
+
+
+def test_topology_config_validation():
+    with pytest.raises(ValueError):
+        TopologyConfig(nodes=())
+    with pytest.raises(ValueError):
+        TopologyConfig(n_clients=0)
+    with pytest.raises(ValueError):
+        TopologyConfig(nodes=(NodeConfig(name="x"), NodeConfig(name="x")))
+    with pytest.raises(ValueError):
+        TopologyConfig(target="nope")
+    with pytest.raises(ValueError):
+        TopologyConfig(traffic=TrafficConfig(mode="closed_loop"))
+    with pytest.raises(ValueError):
+        TopologyConfig(traffic=TrafficConfig(sim_time=False))
+    with pytest.raises(ValueError):
+        SwitchConfig(egress_capacity=0)
+    with pytest.raises(ValueError):
+        TopologyConfig(client_pool=PoolConfig(n_slots=16, slot_size=256),
+                       traffic=TrafficConfig(packet_size=512))
+
+
+# -- scenarios ----------------------------------------------------------------
+
+def _incast(n_clients: int, rate_gbps: float = 3.0,
+            duration_s: float = 0.0003, egress_capacity: int = 32,
+            verify: bool = False) -> TopologyConfig:
+    return TopologyConfig(
+        name=f"incast-{n_clients}",
+        nodes=(NodeConfig(name="server", pool=PoolConfig(n_slots=16384),
+                          port=PortConfig(ring_size=2048,
+                                          writeback_threshold=1),
+                          stack=StackConfig(kind="bypass", burst_size=64)),),
+        n_clients=n_clients,
+        switch=SwitchConfig(egress_capacity=egress_capacity,
+                            link=LinkConfig(gbps=10.0, latency_ns=1000)),
+        traffic=TrafficConfig(mode="open_loop", rate_gbps=rate_gbps,
+                              packet_size=1518, duration_s=duration_s,
+                              seed=7, verify_integrity=verify))
+
+
+def _fingerprint(rep):
+    return (
+        rep.sent, rep.received, rep.dropped, rep.offered_gbps,
+        rep.achieved_gbps, rep.achieved_mpps,
+        None if rep.latency is None else tuple(sorted(
+            rep.latency.as_dict().items())),
+        tuple(tuple(sorted(b.items())) for b in rep.histogram),
+        tuple(sorted(rep.extras.items())),
+    )
+
+
+def test_forward_path_rtt_floor_and_conservation():
+    """1 client -> switch -> server and back: four wire crossings, each
+    paying serialization + propagation, floor the RTT; every frame returns."""
+    rep = run_topology_experiment(_incast(1, rate_gbps=1.0))
+    assert rep.received > 0 and rep.dropped == 0
+    ser = int(round(1518 * 8 / 10.0))  # 1214 ns at 10 Gbps
+    assert rep.latency.min_ns >= 4 * (ser + 1000)
+    assert rep.received + rep.dropped == rep.sent
+
+
+def test_topology_reports_are_bit_identical():
+    """Acceptance: same TopologyConfig + seed -> bit-identical RunReport,
+    including an overloaded (dropping) incast."""
+    for cfg in (_incast(2), _incast(6)):
+        assert _fingerprint(run_topology_experiment(cfg)) == \
+            _fingerprint(run_topology_experiment(cfg))
+
+
+def test_incast_drops_at_switch_egress_not_nics():
+    """Acceptance: in an overloaded incast every loss is a switch
+    egress-buffer drop; NIC rings and pools stay loss-free."""
+    rep = run_topology_experiment(_incast(6))
+    assert rep.dropped > 0
+    assert rep.extras["sw_p0_egress_drops"] == float(rep.dropped)
+    assert rep.extras["sw_p0_occ_high"] == 32.0  # buffer actually filled
+    assert rep.extras["n0_imissed"] == 0.0
+    assert rep.extras["n0_rx_nombuf"] == 0.0
+    assert rep.extras["sw_unrouted"] == 0.0
+    assert rep.received + rep.dropped == rep.sent
+
+
+def test_incast_rtt_tail_grows_with_client_count():
+    """Acceptance: the RTT tail is a queueing observable — more clients into
+    one egress port means deeper switch queues and a fatter tail."""
+    p99 = {}
+    for n in (2, 6):
+        rep = run_topology_experiment(_incast(n))
+        p99[n] = rep.latency.p99_ns
+        assert rep.extras["n0_imissed"] == 0.0  # NICs loss-free throughout
+    assert p99[6] > 2.0 * p99[2]
+
+
+def test_incast_integrity_through_the_fabric():
+    """Payloads survive pool-to-pool DMA, the echo rewrite, and the trip
+    back (checksummed past the flow tuple the server legitimately swaps)."""
+    rep = run_topology_experiment(_incast(2, rate_gbps=1.0, verify=True))
+    assert rep.received > 0
+    assert rep.extras["integrity_errors"] == 0.0
+
+
+def test_multi_node_topology_routes_to_target():
+    """Two nodes on the fabric; only the target sees client traffic, and
+    replies still come home (per-client /16 routes)."""
+    cfg = TopologyConfig(
+        nodes=(NodeConfig(name="a"), NodeConfig(name="b")),
+        n_clients=2,
+        switch=SwitchConfig(link=LinkConfig(gbps=10.0, latency_ns=500)),
+        traffic=TrafficConfig(mode="open_loop", rate_gbps=0.5,
+                              packet_size=512, duration_s=0.0002, seed=3),
+        target="b")
+    rep = run_topology_experiment(cfg)
+    assert rep.received == rep.sent > 0
+    assert rep.extras["n0_rx_packets"] == 0.0   # node "a" untouched
+    assert rep.extras["n1_rx_packets"] == float(rep.sent)
+
+
+def test_kernel_stack_node_on_the_fabric():
+    """The stack registry works per node: an interrupt-driven kernel node
+    echoes fabric traffic deterministically."""
+    cfg = TopologyConfig(
+        nodes=(NodeConfig(name="kserver",
+                          port=PortConfig(ring_size=1024,
+                                          writeback_threshold=1),
+                          stack=StackConfig(kind="kernel")),),
+        n_clients=2,
+        switch=SwitchConfig(link=LinkConfig(gbps=10.0, latency_ns=500)),
+        traffic=TrafficConfig(mode="open_loop", rate_gbps=0.25,
+                              packet_size=512, duration_s=0.0003, seed=5))
+    a = _fingerprint(run_topology_experiment(cfg))
+    b = _fingerprint(run_topology_experiment(cfg))
+    assert a == b
+    assert a[1] > 0  # received
+
+
+def test_build_rejects_colliding_resolved_ips():
+    """An explicit node ip that lands on another node's auto-assigned
+    address must fail loudly at build, not silently shadow its route."""
+    cfg = TopologyConfig(
+        nodes=(NodeConfig(name="a", ip=0xC0A80002), NodeConfig(name="b")),
+        traffic=TrafficConfig(duration_s=0.0001), target="b")
+    with pytest.raises(ValueError, match="collide"):
+        Cluster.build(cfg)
+    cfg2 = TopologyConfig(
+        nodes=(NodeConfig(name="a", ip=0x0A010005),),  # inside client 1's /16
+        traffic=TrafficConfig(duration_s=0.0001))
+    with pytest.raises(ValueError, match="client /16"):
+        Cluster.build(cfg2)
+
+
+def test_run_raises_when_traffic_never_quiesces():
+    """A self-addressed forwarding loop must raise, not spin max_rounds and
+    return a silently-wrong report."""
+    from repro.core.packet import swap_macs_vec
+
+    cluster = Cluster.build(_incast(1, rate_gbps=0.5, duration_s=0.0001))
+    # break the echo: macs swap but flow IPs don't, so every reply is still
+    # addressed to the server and cycles node -> switch -> node forever
+    cluster.nodes[0].server.burst_process_fn = swap_macs_vec
+    with pytest.raises(RuntimeError, match="max_rounds"):
+        cluster.run(max_rounds=20_000)
+
+
+def test_cluster_exposes_live_objects():
+    """Benchmarks need mid-run access (per-queue stats, switch counters)."""
+    cluster = Cluster.build(_incast(2, rate_gbps=0.5, duration_s=0.0001))
+    rep = cluster.run()
+    assert len(cluster.nodes) == 1 and len(cluster.clients) == 2
+    assert cluster.nodes[0].server.stats.rx_packets == rep.received
+    assert cluster.switch.n_ports == 3
+    assert cluster.clock.now_ns > 0

@@ -1,0 +1,90 @@
+"""Telemetry edge cases: degenerate throughput windows and exhaustive
+ServerStats merges — the counters every RunReport is assembled from."""
+from dataclasses import dataclass
+
+import numpy as np
+import pytest
+
+from repro.core import ServerStats, ThroughputMeter
+from repro.core.kernel_stack import KernelStats
+
+
+# -- ThroughputMeter ----------------------------------------------------------
+
+def test_throughput_meter_degenerate_window_reports_nonzero():
+    """Regression: a single completion landing in one terminal flush gives
+    start_ns == end_ns; the meter used to report 0 Gbps (as if nothing
+    moved).  It must measure over the 1 ns tick floor instead."""
+    m = ThroughputMeter()
+    m.on_packet(1518, 1_000)
+    assert m.packets == 1
+    assert m.gbps > 0
+    assert m.mpps > 0
+
+
+def test_throughput_meter_degenerate_merge_counts_window():
+    m = ThroughputMeter()
+    m.merge_counts(4, 4 * 512, 7_000, 7_000)  # burst at one instant
+    assert m.gbps > 0 and m.mpps > 0
+
+
+def test_throughput_meter_empty_still_zero():
+    m = ThroughputMeter()
+    assert m.elapsed_s == 0.0
+    assert m.gbps == 0.0
+    assert m.mpps == 0.0
+
+
+def test_throughput_meter_normal_window_unchanged():
+    m = ThroughputMeter()
+    m.on_packet(1000, 0)
+    m.on_packet(1000, 1_000_000)  # 2000 B over 1 ms
+    assert m.elapsed_s == pytest.approx(1e-3)
+    assert m.gbps == pytest.approx(2000 * 8 / 1e9 / 1e-3)
+    assert m.mpps == pytest.approx(2 / 1e6 / 1e-3)
+
+
+def test_throughput_meter_open_window_anchors_start():
+    m = ThroughputMeter()
+    m.open_window(100)
+    m.on_packet(1518, 1_000_100)
+    assert m.elapsed_s == pytest.approx(1e-3)
+
+
+# -- ServerStats.merge_from ---------------------------------------------------
+
+@dataclass
+class _FloatStats(ServerStats):
+    busy_frac: float = 0.0
+
+
+@dataclass
+class _BadStats(ServerStats):
+    note: str = ""
+
+
+def test_merge_from_is_exhaustive_over_numeric_fields():
+    """Regression: merge_from silently dropped any non-int field a stats
+    subclass added; float fields must accumulate like ints do."""
+    a = _FloatStats(rx_packets=1, busy_frac=0.5)
+    b = _FloatStats(rx_packets=2, busy_frac=0.25)
+    a.merge_from(b)
+    assert a.rx_packets == 3
+    assert a.busy_frac == pytest.approx(0.75)
+
+
+def test_merge_from_fails_loudly_on_unmergeable_field():
+    with pytest.raises(TypeError, match="note"):
+        _BadStats().merge_from(_BadStats())
+
+
+def test_merge_from_still_aggregates_kernel_stats_and_buckets():
+    a, b = KernelStats(), KernelStats()
+    a.record_burst(4)
+    b.record_burst(4)
+    b.syscalls = 7
+    a.merge_from(b)
+    assert a.syscalls == 7
+    assert a.burst_count == 2
+    assert int(a.burst_buckets.sum()) == 2
+    assert isinstance(a.burst_buckets, np.ndarray)
