@@ -18,7 +18,7 @@ def main() -> None:
     sections = [
         ("fig3a", lambda: fig3a_scalability.run(trial_s=args.trial_s)),
         ("fig3b", lambda: fig3b_sensitivity.run(trial_s=args.trial_s)),
-        ("fig4", fig4_dca_burst.run),
+        ("fig4", lambda: fig4_dca_burst.run(duration_s=args.trial_s)),
         ("incast", lambda: fig_incast.run(trial_s=min(args.trial_s, 0.001))),
         ("latency", tbl_latency.run),
         ("kernels", kernels_bench.run),

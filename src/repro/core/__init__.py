@@ -48,7 +48,8 @@ from .simclock import EventScheduler, SimClock, Wire
 from .switch import Switch, SwitchPort
 from .rss import DEFAULT_RSS_KEY, RssIndirection, toeplitz_hash, toeplitz_hash_vec
 from .telemetry import (LatencyRecorder, LatencyStats, QueueTelemetry,
-                        RunReport, ThroughputMeter, rss_skew)
+                        RunReport, ThroughputMeter, rss_skew,
+                        writeback_extras)
 
 __all__ = [
     "BypassDataplane", "BypassL2FwdServer", "BurstPlan", "EthConf", "EthDev",
@@ -69,7 +70,7 @@ __all__ = [
     "run_burst_experiment", "spin_ns", "stamp", "swap_flow_ips",
     "swap_flow_ips_vec", "swap_macs",
     "toeplitz_hash", "toeplitz_hash_vec", "write_flow", "write_flow_ids_vec",
-    "write_seq",
+    "write_seq", "writeback_extras",
     "DEFAULT_MTU", "DEFAULT_RSS_KEY", "DEFAULT_TS_OFFSET", "ETH_HEADER_SIZE",
     "FLOW_OFFSET", "FLOW_SIZE", "MIN_FRAME", "STATUS_DONE", "STATUS_FREE",
 ]

@@ -45,8 +45,27 @@ class BurstPlan:
             if len(self.per_lcore) == 0 or any(b < 1 for b in self.per_lcore):
                 raise ValueError("per_lcore bursts must be a nonempty tuple of >= 1")
 
+    def validate_lcores(self, n_lcores: int) -> "BurstPlan":
+        """Attach-time check: a ``per_lcore`` tuple must name exactly one
+        burst per lcore of the stack adopting this plan.  A 3-entry tuple on
+        a 4-lcore stack would silently recycle entry 0 for lcore 3 through
+        the :meth:`burst_for` modulo fallback — a misconfiguration, not a
+        layout choice, so stacks reject it loudly."""
+        if self.per_lcore is not None and len(self.per_lcore) != n_lcores:
+            raise ValueError(
+                f"BurstPlan.per_lcore has {len(self.per_lcore)} entries for a "
+                f"stack with {n_lcores} lcores; pass exactly one burst per "
+                "lcore (the burst_for modulo wrap is a fallback for direct "
+                "calls, not a layout policy)")
+        return self
+
     def burst_for(self, lcore_id: int) -> int:
-        """The burst size lcore ``lcore_id`` polls with."""
+        """The burst size lcore ``lcore_id`` polls with.
+
+        When ``per_lcore`` is set, out-of-range lcore ids wrap modulo the
+        tuple length — **documented fallback only**, for direct callers that
+        probe a plan without a stack; stacks validate exact length at attach
+        time via :meth:`validate_lcores`."""
         if self.per_lcore is None:
             return self.burst_size
         return self.per_lcore[lcore_id % len(self.per_lcore)]

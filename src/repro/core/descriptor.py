@@ -13,9 +13,17 @@ We model exactly that:
 * ``nic_deliver`` — the "NIC" places a received frame into a descriptor; the
   completion is buffered in the descriptor cache.
 * the cache is *written back* (status published to the consumer-visible array)
-  when ``writeback_threshold`` completions have accumulated, when the ring
-  becomes full, or on an explicit ``flush`` (timeout analogue).
-* ``poll`` — the PMD side harvests written-back descriptors without blocking.
+  when ``writeback_threshold`` completions have accumulated (one writeback
+  **per threshold crossing** — a 256-frame burst at threshold 32 is eight
+  32-descriptor DMAs, not one 256-descriptor DMA), when the ring becomes
+  full, on an explicit ``flush``, or — with a scheduler attached via
+  :meth:`RxDescriptorRing.attach_scheduler` — when the **writeback timeout**
+  fires (the ITR analogue: an idle timer armed by the first completion that
+  enters an empty cache, cancelled when a threshold/full/flush writeback
+  empties it).
+* ``poll`` / ``poll_burst`` — the PMD side harvests *written-back*
+  descriptors without blocking; completions still sitting in the descriptor
+  cache are invisible (``done_count`` is the PMD-visible backlog).
 
 ``writeback_threshold=None`` reproduces the pathological pre-fix behaviour
 (writeback only when all descriptors are used).  Small thresholds reproduce the
@@ -50,13 +58,20 @@ class RxDescriptorRing:
         self.status = np.full(self.size, STATUS_FREE, dtype=np.uint8)
         self.head = 0  # NIC cursor (next descriptor the NIC fills)
         self.tail = 0  # driver cursor (next descriptor the PMD inspects)
+        self.published = 0  # cursor: total completions written back (DONE)
         self._cached = 0  # completions sitting in the descriptor cache
+        # writeback-timeout timer (ITR analogue); armed only when a
+        # scheduler is attached (virtual-time mode)
+        self._sched = None            # EventScheduler, via attach_scheduler
+        self._timeout_ns = 0
+        self._timer: Optional[int] = None  # pending timer token
         # stats
         self.delivered = 0
         self.delivered_bytes = 0
         self.dropped = 0
         self.writebacks = 0  # number of writeback *events* (DMA bursts)
         self.writeback_sizes: List[int] = []  # burst size of each writeback
+        self.timeout_flushes = 0  # writebacks forced by the idle timer
 
     # -- invariant helpers ----------------------------------------------------
     @property
@@ -68,8 +83,52 @@ class RxDescriptorRing:
     def free_descriptors(self) -> int:
         return self.size - self.in_flight
 
+    @property
+    def done_count(self) -> int:
+        """Written-back, not-yet-harvested descriptors — what the PMD can
+        see *right now* (completions still in the descriptor cache are
+        invisible until a writeback publishes them)."""
+        return self.published - self.tail
+
     def _effective_threshold(self) -> int:
         return self.size if self.writeback_threshold is None else self.writeback_threshold
+
+    # -- writeback timeout (ITR analogue) --------------------------------------
+    def attach_scheduler(self, sched, timeout_ns: int) -> "RxDescriptorRing":
+        """Enable the descriptor-cache **writeback timeout** on this ring.
+
+        With a scheduler attached, a completion entering an empty cache arms
+        an idle timer ``timeout_ns`` in the future; if no threshold/full
+        writeback empties the cache before it fires, the timer flushes the
+        cached completions (one timeout writeback).  This is the interrupt-
+        throttling (ITR) analogue the paper's §3.1.4 discussion calls for:
+        it bounds the worst-case time a frame sits PMD-invisible.
+        """
+        if timeout_ns < 0:
+            raise ValueError("timeout_ns must be >= 0")
+        self._sched = sched
+        self._timeout_ns = int(timeout_ns)
+        self._update_timer()
+        return self
+
+    def _on_timeout(self) -> None:
+        self._timer = None
+        if self._cached > 0:
+            self.timeout_flushes += 1
+            self._writeback_n(self._cached)
+        self._update_timer()
+
+    def _update_timer(self) -> None:
+        """Arm the idle timer when completions wait in an empty-timer cache;
+        cancel it when a writeback has emptied the cache."""
+        if self._sched is None or self._timeout_ns <= 0:
+            return
+        if self._cached > 0 and self._timer is None:
+            self._timer = self._sched.schedule_in(self._timeout_ns,
+                                                  self._on_timeout)
+        elif self._cached == 0 and self._timer is not None:
+            self._sched.cancel(self._timer)
+            self._timer = None
 
     # -- NIC side ---------------------------------------------------------------
     def nic_deliver(self, packet_slot: int, length: int) -> bool:
@@ -86,13 +145,18 @@ class RxDescriptorRing:
         self.delivered_bytes += int(length)
         if self._cached >= self._effective_threshold() or self.in_flight >= self.size:
             self._writeback()
+        self._update_timer()
         return True
 
     def nic_deliver_burst(self, packet_slots: np.ndarray, lengths: np.ndarray) -> int:
         """Vectorized delivery of a frame burst. Returns #accepted (rest drop).
 
-        One descriptor-cache occupancy check and at most one writeback per
-        burst — the DMA-burst semantics of a real NIC.
+        Writeback semantics match the per-packet path exactly: one DMA burst
+        of ``writeback_threshold`` descriptors per threshold *crossing* (a
+        256-frame burst at threshold 32 records eight 32-descriptor
+        writebacks), plus a final flush of the remainder if the ring filled.
+        ``writeback_sizes`` is the quantity the paper's Fig. 4 studies — the
+        vectorized path must not coarsen it.
         """
         n = len(packet_slots)
         space = self.size - self.in_flight
@@ -104,30 +168,40 @@ class RxDescriptorRing:
             self.head += take
             self._cached += take
             self.delivered += take
-            self.delivered_bytes += int(lengths[:take].sum())
+            self.delivered_bytes += int(lengths[:take].sum(dtype=np.int64))
         self.dropped += n - take
-        if self._cached >= self._effective_threshold() or self.in_flight >= self.size:
+        thr = self._effective_threshold()
+        while self._cached >= thr:
+            self._writeback_n(thr)
+        if self.in_flight >= self.size:
             self._writeback()
+        self._update_timer()
         return take
 
-    def _writeback(self) -> None:
-        """Publish cached completions to the consumer-visible status array.
-
-        One call == one DMA burst of descriptor writebacks (the quantity the
-        paper's Fig. 4 shows stressing the cache hierarchy when too large).
-        """
-        if self._cached == 0:
+    def _writeback_n(self, k: int) -> None:
+        """Publish the ``k`` oldest cached completions — one DMA burst of
+        descriptor writebacks (the quantity the paper's Fig. 4 shows
+        stressing the cache hierarchy when too large)."""
+        if k <= 0:
             return
         start = self.head - self._cached
-        idx = (start + np.arange(self._cached)) % self.size
+        idx = (start + np.arange(k)) % self.size
         self.status[idx] = STATUS_DONE
         self.writebacks += 1
-        self.writeback_sizes.append(self._cached)
-        self._cached = 0
+        self.writeback_sizes.append(k)
+        self._cached -= k
+        self.published += k
+
+    def _writeback(self) -> None:
+        """Publish every cached completion in one DMA burst."""
+        self._writeback_n(self._cached)
 
     def flush(self) -> None:
-        """Timeout-driven writeback (NICs flush the descriptor cache on idle)."""
+        """Explicit full writeback (a stopping NIC publishes its cache; the
+        pre-timer event loops also call this on a quiet wire).  Idempotent:
+        an empty cache records no writeback event."""
         self._writeback()
+        self._update_timer()
 
     # -- PMD / driver side --------------------------------------------------------
     def poll(self, max_n: int) -> List[Tuple[int, int]]:
@@ -208,9 +282,15 @@ class TxDescriptorRing:
         return True
 
     def post_burst(self, items: List[Tuple[int, int]]) -> int:
+        """Scalar TX post of a burst. Returns #posted — and, like
+        :meth:`post_burst_vec`, counts **every** unposted item as rejected
+        (a full ring rejects the whole tail, not just the first item)."""
         n = 0
         for slot, length in items:
             if not self.post(slot, length):
+                # post() counted the failing item; the untried tail is
+                # rejected too, so scalar and vectorized stats agree
+                self.rejected += len(items) - n - 1
                 break
             n += 1
         return n
@@ -226,7 +306,7 @@ class TxDescriptorRing:
             self.lengths[idx] = lengths[:take]
             self.head += take
             self.posted += take
-            self.posted_bytes += int(lengths[:take].sum())
+            self.posted_bytes += int(lengths[:take].sum(dtype=np.int64))
         self.rejected += n - take
         return take
 
@@ -253,5 +333,5 @@ class TxDescriptorRing:
         self.slots[idx] = -1
         self.tail += take
         self.transmitted += take
-        self.transmitted_bytes += int(lengths.sum())
+        self.transmitted_bytes += int(lengths.sum(dtype=np.int64))
         return slots, lengths

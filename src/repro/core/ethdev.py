@@ -126,6 +126,9 @@ class EthDev:
         # (pool.alloc_failures is pool-scoped); the baseline makes
         # stats_reset() restart this device's view of the counter.
         self._nombuf_base = 0
+        # event scheduler driving this device's descriptor-cache writeback
+        # timeout timers (virtual-time DCA mode; see attach_dca)
+        self.event_sched = None
 
     # -- lifecycle ------------------------------------------------------------
     @property
@@ -222,6 +225,23 @@ class EthDev:
         self._state = EthDevState.STOPPED
         return self
 
+    def attach_dca(self, sched, writeback_timeout_ns: int) -> "EthDev":
+        """Arm the descriptor-cache **writeback timeout** (ITR analogue) on
+        every RX ring: completions idling in a ring's descriptor cache are
+        flushed ``writeback_timeout_ns`` after the first one arrives, as an
+        event on ``sched``.  Call after the queues are set up (a later
+        ``configure()`` builds fresh rings and must be re-attached); the
+        scheduler is also what the virtual-time load generator drives, so it
+        must share the testbed's SimClock."""
+        if self._state is EthDevState.UNCONFIGURED:
+            raise EthDevError(
+                f"dev {self.dev_id}: attach_dca before configure()")
+        self.event_sched = sched
+        for ring in self._rx_rings:
+            if ring is not None:
+                ring.attach_scheduler(sched, writeback_timeout_ns)
+        return self
+
     def _started_port(self) -> Port:
         if self._state is not EthDevState.STARTED or self._port is None:
             raise EthDevError(
@@ -275,6 +295,7 @@ class EthDev:
             out[f"rx_q{q}_packets"] = ring.delivered
             out[f"rx_q{q}_errors"] = ring.dropped
             out[f"rx_q{q}_writebacks"] = ring.writebacks
+            out[f"rx_q{q}_timeout_flushes"] = ring.timeout_flushes
         for q, ring in enumerate(port.tx_queues):
             out[f"tx_q{q}_packets"] = ring.posted
             out[f"tx_q{q}_errors"] = ring.rejected
@@ -299,6 +320,7 @@ class EthDev:
             ring.dropped = 0
             ring.writebacks = 0
             ring.writeback_sizes = []
+            ring.timeout_flushes = 0
         for ring in port.tx_queues:
             ring.posted = 0
             ring.posted_bytes = 0

@@ -63,8 +63,9 @@ from .packet import (
     write_packets_vec,
 )
 from .pmd import Port
-from .simclock import SimClock, Wire
-from .telemetry import LatencyRecorder, RunReport, ThroughputMeter, rss_skew
+from .simclock import EventScheduler, SimClock, Wire
+from .telemetry import (LatencyRecorder, RunReport, ThroughputMeter, rss_skew,
+                        writeback_extras)
 
 TRAFFIC_KINDS = ("uniform", "poisson", "bursty")
 
@@ -403,17 +404,25 @@ class LoadGen:
     def run_sim(self, server: Server, pattern: TrafficPattern,
                 duration_s: float = 0.25,
                 clock: Optional[SimClock] = None,
-                max_rounds: int = 50_000_000) -> RunReport:
+                max_rounds: int = 50_000_000,
+                sched: Optional[EventScheduler] = None) -> RunReport:
         """Offered-load run in virtual time: event-by-event over the analytic
         emission schedule.  Deterministic, host-speed-independent, and able
         to simulate arbitrary rates (100 Gbps on one laptop core).
 
         Event loop: the next event is the earliest of (next scheduled
         emission, next frame landing off a wire, next lcore finishing its
-        modeled work).  At each event time we emit due frames onto the
-        forward wires, deliver due frames into RX rings (RSS + overflow
-        drops), give the server one scheduling round, and drain TX rings
-        through the return wires (recording RTT at return-arrival time).
+        modeled work or giving up on burst accumulation, next event on
+        ``sched``).  At each event time we emit due frames onto the forward
+        wires, deliver due frames into RX rings (RSS + overflow drops), fire
+        due scheduler events (descriptor-cache writeback timeouts), give the
+        server one scheduling round, and drain TX rings through the return
+        wires (recording RTT at return-arrival time).
+
+        ``sched`` carries NIC-side timers (the DCA writeback-timeout events
+        armed via :meth:`~repro.core.ethdev.EthDev.attach_dca`); when not
+        passed explicitly it is discovered from the ports, so factory-built
+        setups (MSB trials) keep their timers firing.
         """
         if clock is None:
             clock = getattr(server, "clock", None)
@@ -422,6 +431,10 @@ class LoadGen:
         if hasattr(server, "attach_clock") \
                 and getattr(server, "clock", None) is not clock:
             server.attach_clock(clock)
+        if sched is None:
+            sched = next((s for s in (getattr(p, "event_sched", None)
+                                      for p in self.ports) if s is not None),
+                         None)
         rng = np.random.default_rng(pattern.seed)
         use_rng_payload = self.verify_integrity
         times, sizes = pattern.emission_schedule(int(duration_s * 1e9), rng)
@@ -466,6 +479,11 @@ class LoadGen:
                     _, slot, size = dq.popleft()
                     port.deliver(slot, size)
                     moved += 1
+            # 2b) scheduler events due: descriptor-cache writeback timeouts
+            #     fire after deliveries at `now` (a threshold crossing at the
+            #     same instant cancels the timer first), before the PMD polls
+            if sched is not None:
+                moved += sched.run_until(now)
             # 3) one server scheduling round at virtual `now`
             if poll_at is not None:
                 moved += poll_at(now)
@@ -485,6 +503,10 @@ class LoadGen:
                 nf = next_free(now)
                 if nf is not None:
                     cands.append(nf)
+            if sched is not None:
+                nt = sched.next_time_ns()
+                if nt is not None:
+                    cands.append(nt)
             if cands:
                 flushed_idle = False
                 clock.advance_to(min(cands))
@@ -582,6 +604,8 @@ class LoadGen:
             histogram=self.latency.histogram(),
         )
         rep.extras["integrity_errors"] = float(self.flight.integrity_errors)
+        # per-RX-ring descriptor-writeback telemetry (the Fig. 4 observable)
+        rep.extras.update(writeback_extras(self.ports))
         # per-queue NIC-side accounting (the RSS-skew observable); only
         # reported for multi-queue ports to keep single-queue reports terse
         for pi, port in enumerate(self.ports):

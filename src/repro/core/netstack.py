@@ -139,6 +139,10 @@ class NetworkStack:
             n_lcores = len(self.queue_pairs)  # DPDK default: one lcore per queue
         if n_lcores < 1:
             raise ValueError("n_lcores must be >= 1")
+        if plan is not None and hasattr(plan, "validate_lcores"):
+            # a per_lcore tuple must name exactly one burst per lcore —
+            # silent modulo recycling misassigns bursts (see BurstPlan)
+            plan.validate_lcores(n_lcores)
         self.lcores: List[Lcore] = []
         for i in range(n_lcores):
             assigned = [pr for j, pr in enumerate(self.queue_pairs)
@@ -155,6 +159,11 @@ class NetworkStack:
         self.sim_cost: HostCostModel = HostCostModel()
         self._lcore_next_free: List[int] = []
         self._accum_ns: float = 0.0
+        self._poll_now_ns: int = 0  # virtual now of the current poll_at round
+        # per-(port, queue) give-up deadlines for stacks that *accumulate*
+        # toward a full burst before forwarding (the Fig. 4 DCA semantics);
+        # next_free_ns surfaces them so event loops advance time to them
+        self._queue_deadline: Dict[Tuple[int, int], int] = {}
 
     # -- virtual time ---------------------------------------------------------
     def attach_clock(self, clock: SimClock,
@@ -191,6 +200,7 @@ class NetworkStack:
         clock is attached."""
         if self.clock is None:
             return self.poll_once()
+        self._poll_now_ns = now_ns
         total = 0
         for i, lcore in enumerate(self.lcores):
             if self._lcore_next_free[i] > now_ns:
@@ -202,9 +212,11 @@ class NetworkStack:
         return total
 
     def next_free_ns(self, now_ns: int) -> Optional[int]:
-        """Earliest future time any busy lcore frees up (None if all idle) —
-        the event the load generator waits on when the wire is quiet."""
+        """Earliest future time any busy lcore frees up, or any queue's
+        burst-accumulation deadline expires (None if neither) — the event
+        the load generator waits on when the wire is quiet."""
         future = [t for t in self._lcore_next_free if t > now_ns]
+        future += [t for t in self._queue_deadline.values() if t > now_ns]
         return min(future) if future else None
 
     # -- scheduling -----------------------------------------------------------

@@ -230,6 +230,17 @@ class BypassL2FwdServer(NetworkStack):
     is the DPDK burst knob the DCA use-case (paper §5.2) sweeps — pass a
     :class:`~repro.core.dca.BurstPlan` for per-lcore bursts.  ``n_lcores``
     defaults to one lcore per (port, queue) pair.
+
+    **DCA accumulate mode** (:meth:`enable_dca_accumulate`, virtual time
+    only): the paper's Fig. 4(b) variant "waits until [burst] packets are
+    received and then starts the forwarding".  A queue whose written-back
+    backlog is below the lcore's burst is left to accumulate; the wait is
+    bounded by a give-up deadline (``wait_timeout_ns`` past the first
+    observation of a partial backlog, surfaced to the event loop through
+    ``next_free_ns``), so tail packets are forwarded even when the offered
+    train ends mid-burst.  This is what makes the burst-size knob move
+    measured end-to-end RTT percentiles instead of only queue-occupancy
+    proxies.
     """
 
     def __init__(
@@ -252,10 +263,45 @@ class BypassL2FwdServer(NetworkStack):
         self.burst_process_fn = burst_process_fn if burst_process_fn is not None else (
             None if process_fn is not None else swap_macs_vec
         )
+        self._dca_wait_ns: Optional[int] = None
+
+    def enable_dca_accumulate(self, wait_timeout_ns: int) -> "BypassL2FwdServer":
+        """Turn on Fig. 4 accumulate-then-forward: each lcore waits for a
+        full burst of written-back descriptors before forwarding, giving up
+        ``wait_timeout_ns`` after first observing a partial backlog.  Only
+        meaningful with an attached SimClock (wall-clock mode ignores it —
+        there the host's real pacing is the measurement)."""
+        if wait_timeout_ns < 0:
+            raise ValueError("wait_timeout_ns must be >= 0")
+        self._dca_wait_ns = int(wait_timeout_ns)
+        return self
 
     def _service_queue(self, lcore: Lcore, port_idx: int, queue_idx: int,
                        qstats: ServerStats) -> int:
         port = self.ports[port_idx]
+        if self._dca_wait_ns is not None and self.clock is not None:
+            ring = port.rx_queues[queue_idx]
+            avail = ring.done_count
+            key = (port_idx, queue_idx)
+            if avail == 0:
+                qstats.poll_iterations += 1
+                qstats.empty_polls += 1
+                self._queue_deadline.pop(key, None)
+                return 0
+            if avail < lcore.burst_size:
+                now = self._poll_now_ns
+                deadline = self._queue_deadline.get(key)
+                if deadline is None:
+                    # first sight of a partial burst: start the give-up timer
+                    self._queue_deadline[key] = now + self._dca_wait_ns
+                    qstats.poll_iterations += 1
+                    return 0
+                if now < deadline:
+                    qstats.poll_iterations += 1
+                    return 0
+                # deadline expired: forward the partial burst (bounds the
+                # worst-case latency of a train that ends mid-burst)
+            self._queue_deadline.pop(key, None)
         # the DPDK loop iteration, verbatim: rx_burst → process → tx_burst
         slots, lengths = port.rx_burst(queue_idx, lcore.burst_size)
         qstats.poll_iterations += 1

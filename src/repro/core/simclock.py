@@ -22,10 +22,17 @@ Components:
   monotonically and only explicitly.
 * :class:`EventScheduler` — a lightweight min-heap of (time, callback) events
   with deterministic FIFO tie-breaking, for anything that needs "call me at
-  T" semantics on top of the clock.  (The load generator's hot loop inlines
-  its own three-source event selection for speed — emissions, wire arrivals
-  and lcore-free times are each already sorted — but composed scenarios,
-  e.g. the ROADMAP's multi-host Switch/Topology work, schedule here.)
+  T" semantics on top of the clock.  ``schedule_at``/``schedule_in`` return a
+  token that :meth:`EventScheduler.cancel` accepts, so *timers* (events that
+  may be superseded before they fire — e.g. the NIC descriptor-cache
+  writeback timeout, the ITR analogue) compose with ordinary events.
+  Cancellation is lazy: tombstoned entries are purged when they reach the
+  heap top, so cancel is O(1) and the heap never fires a dead callback.
+  (The load generator's hot loop inlines its own event selection for speed —
+  emissions, wire arrivals and lcore-free times are each already sorted —
+  but composed scenarios (the Switch/Topology layer, descriptor-writeback
+  timers) schedule here, and the loop folds ``next_time_ns()`` into its
+  candidate set.)
 * :class:`Wire` — one simplex link: serialization delay (``bytes*8/gbps``)
   plus fixed propagation latency, with FIFO busy-until semantics so back-to-
   back frames queue on the wire like they do on real copper/fiber.
@@ -74,45 +81,81 @@ class EventScheduler:
     Events at equal times fire in insertion order (FIFO tie-break via a
     monotone sequence number), so two runs of the same schedule are
     bit-identical — the property every determinism test leans on.
+
+    ``schedule_at``/``schedule_in`` return an opaque token; :meth:`cancel`
+    tombstones the matching event (lazy deletion — the entry is discarded
+    when it surfaces at the heap top, never fired).  ``len(sched)`` counts
+    *live* events only.
     """
 
     def __init__(self, clock: Optional[SimClock] = None):
         self.clock = clock if clock is not None else SimClock()
         self._heap: List[Tuple[int, int, Callable[[], None]]] = []
         self._seq = 0
+        self._live: set = set()  # seq numbers of not-yet-fired, not-cancelled
 
     def __len__(self) -> int:
-        return len(self._heap)
+        return len(self._live)
 
-    def schedule_at(self, t_ns: int, fn: Callable[[], None]) -> None:
+    def schedule_at(self, t_ns: int, fn: Callable[[], None]) -> int:
         """Schedule ``fn`` to run when the clock reaches ``t_ns``.  Times in
-        the past fire on the next ``run_until``/``run_next`` at current now."""
+        the past fire on the next ``run_until``/``run_next`` at current now.
+        Returns a token accepted by :meth:`cancel`."""
         heapq.heappush(self._heap, (int(t_ns), self._seq, fn))
+        self._live.add(self._seq)
+        token = self._seq
         self._seq += 1
+        return token
 
-    def schedule_in(self, delay_ns: int, fn: Callable[[], None]) -> None:
-        self.schedule_at(self.clock.now_ns + int(delay_ns), fn)
+    def schedule_in(self, delay_ns: int, fn: Callable[[], None]) -> int:
+        return self.schedule_at(self.clock.now_ns + int(delay_ns), fn)
+
+    def cancel(self, token: int) -> bool:
+        """Cancel a pending event by token.  Returns True if it was still
+        pending (it will never fire), False if it already fired, was already
+        cancelled, or the token is unknown."""
+        if token in self._live:
+            self._live.discard(token)
+            # lazy deletion never fires a dead event, but tombstones below
+            # the heap top linger; compact when they dominate so arm/cancel
+            # churn (e.g. per-packet writeback timers) stays O(live)
+            if len(self._heap) > 64 and len(self._heap) > 4 * len(self._live):
+                self._heap = [e for e in self._heap if e[1] in self._live]
+                heapq.heapify(self._heap)
+            return True
+        return False
+
+    def _drop_dead_head(self) -> None:
+        """Purge tombstoned (cancelled) entries off the heap top."""
+        while self._heap and self._heap[0][1] not in self._live:
+            heapq.heappop(self._heap)
 
     def next_time_ns(self) -> Optional[int]:
-        """Timestamp of the earliest pending event, or None if empty."""
+        """Timestamp of the earliest *live* pending event, or None if empty."""
+        self._drop_dead_head()
         return self._heap[0][0] if self._heap else None
 
     def run_next(self) -> bool:
-        """Advance the clock to the earliest event and run it.  Returns False
-        when no events are pending."""
+        """Advance the clock to the earliest live event and run it.  Returns
+        False when no live events are pending."""
+        self._drop_dead_head()
         if not self._heap:
             return False
-        t, _, fn = heapq.heappop(self._heap)
+        t, seq, fn = heapq.heappop(self._heap)
+        self._live.discard(seq)
         self.clock.advance_to(t)
         fn()
         return True
 
     def run_until(self, t_ns: int) -> int:
-        """Run every event scheduled at or before ``t_ns`` (in time order),
-        then advance the clock to ``t_ns``.  Returns the number of events
-        that fired."""
+        """Run every live event scheduled at or before ``t_ns`` (in time
+        order), then advance the clock to ``t_ns``.  Returns the number of
+        events that fired."""
         fired = 0
-        while self._heap and self._heap[0][0] <= t_ns:
+        while True:
+            nt = self.next_time_ns()
+            if nt is None or nt > t_ns:
+                break
             self.run_next()
             fired += 1
         self.clock.advance_to(t_ns)

@@ -102,6 +102,28 @@ class LatencyRecorder:
         ]
 
 
+def writeback_extras(ports: List[object], prefix: str = "") -> Dict[str, float]:
+    """Per-RX-ring descriptor-writeback telemetry, RunReport.extras-shaped.
+
+    For every (port, queue) RX ring: the number of writeback DMA events
+    (``writebacks``), the mean/max writeback burst size (the distribution the
+    paper's Fig. 4 studies — large bursts are the LLC-thrashing regime), and
+    how many of those events were forced by the idle-timeout timer
+    (``timeout_flushes``, the ITR analogue).  ``prefix`` namespaces the keys
+    for multi-host reports (e.g. ``n0_``).
+    """
+    out: Dict[str, float] = {}
+    for pi, port in enumerate(ports):
+        for qi, ring in enumerate(port.rx_queues):
+            k = f"{prefix}p{pi}q{qi}"
+            sizes = ring.writeback_sizes
+            out[f"{k}_writebacks"] = float(ring.writebacks)
+            out[f"{k}_wb_size_mean"] = float(np.mean(sizes)) if sizes else 0.0
+            out[f"{k}_wb_size_max"] = float(max(sizes)) if sizes else 0.0
+            out[f"{k}_timeout_flushes"] = float(ring.timeout_flushes)
+    return out
+
+
 def rss_skew(per_queue_counts: List[int]) -> Dict[str, float]:
     """RSS load-imbalance summary over per-queue packet counts.
 

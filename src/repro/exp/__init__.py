@@ -1,16 +1,17 @@
 # Declarative experiment layer: frozen configs -> Testbed -> RunReport.
 # The API every scenario (benchmark, example, future PR) builds on.
 # Multi-host scenarios: TopologyConfig -> Cluster -> RunReport.
-from .config import (CostConfig, ExperimentConfig, LinkConfig, NodeConfig,
-                     PoolConfig, PortConfig, RssConfig, StackConfig,
-                     SwitchConfig, TopologyConfig, TrafficConfig)
+from .config import (CostConfig, DcaConfig, ExperimentConfig, LinkConfig,
+                     NodeConfig, PoolConfig, PortConfig, RssConfig,
+                     StackConfig, SwitchConfig, TopologyConfig, TrafficConfig)
 from .runner import (make_server_factory, run_experiment,
                      run_topology_experiment, run_testbed)
 from .testbed import Testbed, build_stack, register_stack, stack_kinds
 from .topology import Client, Cluster, Node
 
 __all__ = [
-    "Client", "Cluster", "CostConfig", "ExperimentConfig", "LinkConfig",
+    "Client", "Cluster", "CostConfig", "DcaConfig", "ExperimentConfig",
+    "LinkConfig",
     "Node", "NodeConfig", "PoolConfig", "PortConfig",
     "RssConfig", "StackConfig", "SwitchConfig", "TopologyConfig",
     "TrafficConfig",

@@ -140,6 +140,87 @@ class PortConfig:
 
 
 @dataclass(frozen=True)
+class DcaConfig:
+    """The paper's §3.1.4/§5.2 DCA knobs, as one sim-time unit.
+
+    When set on an :class:`ExperimentConfig` (or :class:`NodeConfig`), the
+    descriptor path runs the full virtual-time DCA model and these values
+    override the scattered legacy knobs (``PortConfig.writeback_threshold``,
+    ``StackConfig.burst_size``/``per_lcore_bursts``):
+
+    * ``writeback_threshold`` — completions per descriptor-cache writeback
+      DMA (``None`` == the pathological pre-fix "whole ring" behaviour);
+    * ``writeback_timeout_ns`` — the ITR analogue: an idle timer (an
+      :class:`~repro.core.simclock.EventScheduler` event) flushes cached
+      completions this long after the first one arrives, bounding how long a
+      frame can sit PMD-invisible.  The same bound caps how long a bypass
+      lcore accumulates toward a full burst before forwarding a partial one
+      (Fig. 4's tail-of-train case);
+    * ``burst_size`` / ``per_lcore_bursts`` — the L2Fwd processing burst the
+      paper's Fig. 4 sweeps: in DCA mode the bypass stack *accumulates* a
+      full burst of written-back descriptors before forwarding, so this knob
+      moves measured RTT percentiles end-to-end.
+
+    Requires ``traffic.sim_time`` — the writeback timer and accumulation
+    deadline are virtual-time events.
+    """
+
+    burst_size: int = 32
+    writeback_threshold: Optional[int] = 32
+    writeback_timeout_ns: int = 200_000
+    per_lcore_bursts: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self) -> None:
+        if self.burst_size < 1:
+            raise ValueError("burst_size must be >= 1")
+        if self.writeback_threshold is not None and self.writeback_threshold < 1:
+            raise ValueError("writeback_threshold must be >= 1 or None")
+        if self.writeback_timeout_ns < 1:
+            # 0 would mean "never flush" at the NIC timer but "give up
+            # immediately" at the PMD — opposite semantics for one knob.
+            # The timeout is the model's latency bound; it must exist.
+            raise ValueError(
+                "writeback_timeout_ns must be >= 1 (it bounds how long a "
+                "completion can sit PMD-invisible; to make timeouts "
+                "irrelevant use a small writeback_threshold instead)")
+        if self.per_lcore_bursts is not None and (
+                len(self.per_lcore_bursts) == 0
+                or any(b < 1 for b in self.per_lcore_bursts)):
+            raise ValueError("per_lcore_bursts must be a nonempty tuple of >= 1")
+
+    def max_burst(self) -> int:
+        """Largest burst any lcore can be asked to accumulate."""
+        if self.per_lcore_bursts is not None:
+            return max(self.per_lcore_bursts)
+        return self.burst_size
+
+    def validate_ring(self, ring_size: int, what: str) -> None:
+        """A threshold or accumulation burst larger than the ring can never
+        be reached — the sweep knob would silently degenerate to
+        timeout-only publication/forwarding, so reject it at config time."""
+        if (self.writeback_threshold is not None
+                and self.writeback_threshold > ring_size):
+            raise ValueError(
+                f"dca.writeback_threshold={self.writeback_threshold} "
+                f"exceeds {what} ring_size={ring_size}")
+        if self.max_burst() > ring_size:
+            raise ValueError(
+                f"dca burst_size={self.max_burst()} exceeds {what} "
+                f"ring_size={ring_size}; a full burst could never "
+                "accumulate (every forward would wait out the timeout)")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _config_to_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "DcaConfig":
+        d = dict(d)
+        if d.get("per_lcore_bursts") is not None:
+            d["per_lcore_bursts"] = tuple(d["per_lcore_bursts"])
+        return cls(**d)
+
+
+@dataclass(frozen=True)
 class CostConfig:
     """Host-cost model (mirrors :class:`repro.core.cost.HostCostModel`); the
     Fig. 3(b) knobs.  The ``pmd_*`` figures price the polling path in
@@ -285,12 +366,23 @@ class ExperimentConfig:
     ports: Tuple[PortConfig, ...] = (PortConfig(),)
     stack: StackConfig = field(default_factory=StackConfig)
     traffic: TrafficConfig = field(default_factory=TrafficConfig)
+    # sim-time DCA model (writeback threshold/timeout + processing burst);
+    # None == legacy behaviour (synchronous thresholds, no timers, no
+    # burst accumulation)
+    dca: Optional[DcaConfig] = None
 
     def __post_init__(self) -> None:
         if not self.ports:
             raise ValueError("need at least one port")
         if self.stack.kind == "pipeline" and len(self.ports) != 1:
             raise ValueError("the pipeline stack drives exactly one port")
+        if self.dca is not None:
+            if not self.traffic.sim_time:
+                raise ValueError(
+                    "DcaConfig is a virtual-time model; it needs "
+                    "traffic.sim_time=True")
+            for p in self.ports:
+                self.dca.validate_ring(p.ring_size, "a port's")
 
     def to_dict(self) -> Dict[str, Any]:
         return _config_to_dict(self)
@@ -302,6 +394,8 @@ class ExperimentConfig:
         d["ports"] = tuple(PortConfig.from_dict(p) for p in d.get("ports", [{}]))
         d["stack"] = StackConfig.from_dict(d.get("stack", {}))
         d["traffic"] = TrafficConfig.from_dict(d.get("traffic", {}))
+        if d.get("dca") is not None:
+            d["dca"] = DcaConfig.from_dict(d["dca"])
         return cls(**d)
 
     # replace() helpers keep sweep code terse: cfg.with_traffic(rate_gbps=2.0)
@@ -313,6 +407,12 @@ class ExperimentConfig:
 
     def with_ports(self, **kw: Any) -> "ExperimentConfig":
         return replace(self, ports=tuple(replace(p, **kw) for p in self.ports))
+
+    def with_dca(self, **kw: Any) -> "ExperimentConfig":
+        """Sweep helper: override fields of ``dca`` (starting from defaults
+        when unset) — ``cfg.with_dca(burst_size=1024)``."""
+        base = self.dca if self.dca is not None else DcaConfig()
+        return replace(self, dca=replace(base, **kw))
 
 
 # -- multi-host topologies ----------------------------------------------------
@@ -353,10 +453,15 @@ class NodeConfig:
     pool: PoolConfig = field(default_factory=PoolConfig)
     port: PortConfig = field(default_factory=PortConfig)
     stack: StackConfig = field(default_factory=StackConfig)
+    # sim-time DCA model for this node's NIC/stack (topologies always run in
+    # virtual time, so no sim_time gate is needed here)
+    dca: Optional[DcaConfig] = None
 
     def __post_init__(self) -> None:
         if not 0 <= self.ip <= 0xFFFFFFFF:
             raise ValueError("ip must be a u32 (0 == auto-assign)")
+        if self.dca is not None:
+            self.dca.validate_ring(self.port.ring_size, "the node's")
 
     def to_dict(self) -> Dict[str, Any]:
         return _config_to_dict(self)
@@ -367,6 +472,8 @@ class NodeConfig:
         d["pool"] = PoolConfig.from_dict(d.get("pool", {}))
         d["port"] = PortConfig.from_dict(d.get("port", {}))
         d["stack"] = StackConfig.from_dict(d.get("stack", {}))
+        if d.get("dca") is not None:
+            d["dca"] = DcaConfig.from_dict(d["dca"])
         return cls(**d)
 
 

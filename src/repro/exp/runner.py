@@ -55,7 +55,8 @@ def run_testbed(tb: Testbed) -> RunReport:
                                  burst_len=t.burst_len, seed=t.seed)
         if tb.clock is not None:
             return tb.loadgen.run_sim(tb.server, pattern,
-                                      duration_s=t.duration_s, clock=tb.clock)
+                                      duration_s=t.duration_s, clock=tb.clock,
+                                      sched=tb.sched)
         return tb.loadgen.run(tb.server, pattern, duration_s=t.duration_s,
                               drain_timeout_s=t.drain_timeout_s)
     raise ValueError(f"run_testbed cannot drive traffic mode {t.mode!r}")

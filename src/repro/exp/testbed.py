@@ -8,13 +8,15 @@ module (the gem5-stdlib/SimBricks extension point).
 """
 from __future__ import annotations
 
+from dataclasses import replace
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core import (BurstPlan, BypassL2FwdServer, EthConf, EthDev,
-                        KernelStackServer, LoadGen, NetworkStack,
-                        PacketPool, PipelineServer, QueueTelemetry, SimClock)
+                        EventScheduler, KernelStackServer, LoadGen,
+                        NetworkStack, PacketPool, PipelineServer,
+                        QueueTelemetry, SimClock)
 
-from .config import CostConfig, ExperimentConfig, StackConfig
+from .config import CostConfig, DcaConfig, ExperimentConfig, StackConfig
 
 StackFactory = Callable[[StackConfig, Sequence[EthDev]], NetworkStack]
 
@@ -46,10 +48,42 @@ def build_stack(cfg: StackConfig, devs: Sequence[EthDev]) -> NetworkStack:
 
 @register_stack("bypass")
 def _build_bypass(cfg: StackConfig, devs: Sequence[EthDev]) -> NetworkStack:
-    plan = (BurstPlan(per_lcore=cfg.per_lcore_bursts)
+    plan = (BurstPlan(burst_size=cfg.burst_size, per_lcore=cfg.per_lcore_bursts)
             if cfg.per_lcore_bursts is not None else None)
     return BypassL2FwdServer(list(devs), burst_size=cfg.burst_size,
                              n_lcores=cfg.n_lcores, plan=plan)
+
+
+def effective_stack_config(stack: StackConfig,
+                           dca: Optional[DcaConfig]) -> StackConfig:
+    """Fold a :class:`DcaConfig`'s burst plan into the stack config (DCA
+    overrides the legacy burst knobs) — shared by Testbed and Cluster."""
+    if dca is None:
+        return stack
+    return replace(stack, burst_size=dca.burst_size,
+                   per_lcore_bursts=dca.per_lcore_bursts)
+
+
+def effective_writeback_threshold(dca: Optional[DcaConfig],
+                                  legacy: Optional[int]) -> Optional[int]:
+    """The RX rings' writeback threshold: the DcaConfig centralizes the
+    descriptor-path knobs and overrides the per-port legacy value."""
+    return dca.writeback_threshold if dca is not None else legacy
+
+
+def apply_dca(dca: Optional[DcaConfig], devs: Sequence[EthDev],
+              server: NetworkStack, sched: EventScheduler) -> None:
+    """Arm the sim-time DCA model on built devices + stack: writeback-timeout
+    timers on every RX ring (ITR analogue, events on ``sched``) and Fig. 4
+    accumulate-then-forward on stacks that support it, both bounded by the
+    same ``writeback_timeout_ns``.  One code path for single-host testbeds
+    and topology nodes, so the two can never diverge on the same DcaConfig."""
+    if dca is None:
+        return
+    for dev in devs:
+        dev.attach_dca(sched, dca.writeback_timeout_ns)
+    if hasattr(server, "enable_dca_accumulate"):
+        server.enable_dca_accumulate(dca.writeback_timeout_ns)
 
 
 @register_stack("pipeline")
@@ -76,13 +110,15 @@ class Testbed:
 
     def __init__(self, cfg: ExperimentConfig, pool: PacketPool,
                  devs: List[EthDev], server: NetworkStack, loadgen: LoadGen,
-                 clock: Optional[SimClock] = None):
+                 clock: Optional[SimClock] = None,
+                 sched: Optional[EventScheduler] = None):
         self.cfg = cfg
         self.pool = pool
         self.devs = devs
         self.server = server
         self.loadgen = loadgen
         self.clock = clock  # the testbed's virtual time (None == wall clock)
+        self.sched = sched  # event queue on that clock (writeback timers &c.)
         self.telemetry = QueueTelemetry()
 
     @property
@@ -95,30 +131,36 @@ class Testbed:
         pool = PacketPool(cfg.pool.n_slots, cfg.pool.slot_size)
         devs: List[EthDev] = []
         for dev_id, pc in enumerate(cfg.ports):
+            threshold = effective_writeback_threshold(cfg.dca,
+                                                      pc.writeback_threshold)
             dev = EthDev(pool, dev_id=dev_id).configure(EthConf(
                 n_rx_queues=pc.n_queues, n_tx_queues=pc.n_queues,
                 rss_key=pc.rss.key, rss_table_size=pc.rss.table_size,
                 link_gbps=pc.link.gbps, link_latency_ns=pc.link.latency_ns))
             for q in range(pc.n_queues):
                 dev.rx_queue_setup(q, pc.ring_size,
-                                   writeback_threshold=pc.writeback_threshold)
+                                   writeback_threshold=threshold)
                 dev.tx_queue_setup(q, pc.ring_size)
             devs.append(dev.dev_start())
-        server = build_stack(cfg.stack, devs)
+        server = build_stack(effective_stack_config(cfg.stack, cfg.dca), devs)
         clock: Optional[SimClock] = None
+        sched: Optional[EventScheduler] = None
         if cfg.traffic.sim_time:
             # one virtual clock per testbed: the loadgen advances it, the
-            # server charges lcore busy-time against it
+            # server charges lcore busy-time against it, and one event queue
+            # on that clock carries NIC-side timers
             clock = SimClock()
+            sched = EventScheduler(clock)
             if hasattr(server, "attach_clock"):
                 cost = (cfg.stack.cost if cfg.stack.cost is not None
                         else CostConfig())
                 server.attach_clock(clock, cost.to_host_cost_model())
+            apply_dca(cfg.dca, devs, server, sched)
         t = cfg.traffic
         loadgen = LoadGen(devs, ts_offset=t.ts_offset,
                           verify_integrity=t.verify_integrity,
                           max_tx_burst=t.max_tx_burst, n_flows=t.n_flows)
-        return cls(cfg, pool, devs, server, loadgen, clock=clock)
+        return cls(cfg, pool, devs, server, loadgen, clock=clock, sched=sched)
 
     def xstats(self) -> Dict[str, int]:
         """Merged extended stats over every device, DPDK-named with a

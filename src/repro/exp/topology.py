@@ -34,12 +34,14 @@ import numpy as np
 
 from repro.core import (EthConf, EthDev, EventScheduler, LatencyRecorder,
                         LoadGen, NetworkStack, PacketPool, RunReport,
-                        SimClock, Switch, ThroughputMeter, TrafficPattern)
+                        SimClock, Switch, ThroughputMeter, TrafficPattern,
+                        writeback_extras)
 from repro.core.packet import (l2fwd_echo, l2fwd_echo_vec, swap_macs,
                                swap_macs_vec)
 
 from .config import CostConfig, NodeConfig, TopologyConfig
-from .testbed import build_stack
+from .testbed import (apply_dca, build_stack, effective_stack_config,
+                      effective_writeback_threshold)
 
 CLIENT_IP_BASE = 0x0A000000   # client g owns 10.(g+1).0.0/16 on the fabric
 NODE_AUTO_IP_BASE = 0xC0A80001  # auto-assigned node i: 192.168.0.(i+1)
@@ -142,16 +144,22 @@ class Cluster:
                 n_rx_queues=nc.port.n_queues, n_tx_queues=nc.port.n_queues,
                 rss_key=nc.port.rss.key,
                 rss_table_size=nc.port.rss.table_size))
+            threshold = effective_writeback_threshold(
+                nc.dca, nc.port.writeback_threshold)
             for q in range(nc.port.n_queues):
                 dev.rx_queue_setup(
                     q, nc.port.ring_size,
-                    writeback_threshold=nc.port.writeback_threshold)
+                    writeback_threshold=threshold)
                 dev.tx_queue_setup(q, nc.port.ring_size)
             dev.dev_start()
-            server = build_stack(nc.stack, [dev])
+            server = build_stack(effective_stack_config(nc.stack, nc.dca), [dev])
             if hasattr(server, "attach_clock"):
                 cost = nc.stack.cost if nc.stack.cost is not None else CostConfig()
                 server.attach_clock(clock, cost.to_host_cost_model())
+            # the node's writeback timers ride the cluster's shared
+            # scheduler, so they interleave deterministically with fabric
+            # events; same wiring as a single-host testbed by construction
+            apply_dca(nc.dca, [dev], server, sched)
             # a switched fabric needs replies re-addressed to their sender:
             # upgrade the stock L2Fwd transform to the echo variant (custom
             # process fns registered by scenario stacks are left alone)
@@ -318,5 +326,7 @@ class Cluster:
             rep.extras[f"n{ni}_rx_packets"] = float(st.ipackets)
             rep.extras[f"n{ni}_imissed"] = float(st.imissed)
             rep.extras[f"n{ni}_rx_nombuf"] = float(st.rx_nombuf)
+            # per-ring descriptor-writeback telemetry (the Fig. 4 observable)
+            rep.extras.update(writeback_extras([node.dev], prefix=f"n{ni}_"))
         rep.extras.update(self.switch.extras())
         return rep

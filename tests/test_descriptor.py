@@ -95,3 +95,142 @@ def test_tx_ring_drain():
     s, l = tx.drain_burst(10)
     assert list(s) == [3, 4]
     assert tx.transmitted == 5
+
+
+# -- regression: vectorized writeback must match the per-packet path ----------
+
+def test_deliver_burst_one_writeback_per_threshold_crossing():
+    """Regression: a 256-frame burst at threshold 32 is eight 32-descriptor
+    DMAs, not one 256-descriptor DMA.  ``writeback_sizes`` is exactly the
+    quantity Fig. 4 studies, so the vectorized path must not coarsen it."""
+    ring = RxDescriptorRing(512, writeback_threshold=32)
+    ring.nic_deliver_burst(np.arange(256, dtype=np.int64),
+                           np.full(256, 100, np.int32))
+    assert ring.writebacks == 8
+    assert ring.writeback_sizes == [32] * 8
+
+
+def test_deliver_burst_writebacks_match_scalar_deliver():
+    """Scalar/vector parity on writeback *events*, not just polled frames."""
+    scalar = RxDescriptorRing(512, writeback_threshold=24)
+    vector = RxDescriptorRing(512, writeback_threshold=24)
+    slots = np.arange(100, dtype=np.int64)
+    lengths = np.full(100, 64, np.int32)
+    for s in slots:
+        scalar.nic_deliver(int(s), 64)
+    vector.nic_deliver_burst(slots, lengths)
+    assert vector.writebacks == scalar.writebacks
+    assert vector.writeback_sizes == scalar.writeback_sizes
+    assert vector.done_count == scalar.done_count
+    assert vector.delivered_bytes == scalar.delivered_bytes
+
+
+def test_deliver_burst_residue_flushes_when_ring_fills():
+    """Ring-full still publishes the sub-threshold residue (both paths)."""
+    ring = RxDescriptorRing(10, writeback_threshold=4)
+    ring.nic_deliver_burst(np.arange(10, dtype=np.int64),
+                           np.full(10, 50, np.int32))
+    # two threshold crossings of 4, then the full ring flushes the 2 left
+    assert ring.writeback_sizes == [4, 4, 2]
+    assert ring.done_count == 10
+
+
+# -- regression: TX scalar/vector stats parity ---------------------------------
+
+def test_tx_post_burst_counts_untried_tail_as_rejected():
+    """Regression: post_burst used to stop at the first rejected item and
+    leave the rest of the burst uncounted, so scalar and vectorized paths
+    disagreed on ``rejected`` for the same offered burst."""
+    scalar = TxDescriptorRing(4)
+    vector = TxDescriptorRing(4)
+    items = [(i, 10) for i in range(9)]
+    n_scalar = scalar.post_burst(items)
+    n_vector = vector.post_burst_vec(np.arange(9, dtype=np.int64),
+                                     np.full(9, 10, np.int32))
+    assert n_scalar == n_vector == 4
+    assert scalar.rejected == vector.rejected == 5
+    assert scalar.posted == vector.posted == 4
+    assert scalar.posted_bytes == vector.posted_bytes == 40
+
+
+def test_tx_post_burst_no_rejects_unchanged():
+    tx = TxDescriptorRing(8)
+    assert tx.post_burst([(i, 5) for i in range(6)]) == 6
+    assert tx.rejected == 0
+
+
+# -- invariant suite -----------------------------------------------------------
+
+def test_rx_wraparound_cursors_past_size():
+    """head/tail keep counting past ``size``; slot indices stay correct."""
+    ring = RxDescriptorRing(8, writeback_threshold=2)
+    polled = []
+    for i in range(100):
+        assert ring.nic_deliver(i, 10)
+        got = ring.poll_burst(8)[0]
+        polled.extend(int(s) for s in got)
+    ring.flush()
+    polled.extend(int(s) for s in ring.poll_burst(8)[0])
+    assert polled == list(range(100))
+    assert ring.head == ring.tail == 100  # far past size=8
+    assert ring.published == 100
+    assert ring.in_flight == 0
+
+
+def test_poll_and_poll_burst_parity_on_partial_writeback():
+    """With completions split cache/published, both harvest APIs must see
+    exactly the published prefix."""
+    a = RxDescriptorRing(32, writeback_threshold=8)
+    b = RxDescriptorRing(32, writeback_threshold=8)
+    for ring in (a, b):
+        for i in range(11):  # one writeback of 8; 3 still cached
+            ring.nic_deliver(i, 20)
+        assert ring.done_count == 8
+    got_a = a.poll(32)
+    s_b, l_b = b.poll_burst(32)
+    assert [s for s, _ in got_a] == list(s_b) == list(range(8))
+    assert [l for _, l in got_a] == list(l_b)
+    assert a.tail == b.tail == 8
+
+
+def test_flush_is_idempotent():
+    ring = RxDescriptorRing(16, writeback_threshold=8)
+    for i in range(3):
+        ring.nic_deliver(i, 10)
+    ring.flush()
+    assert ring.writebacks == 1 and ring.writeback_sizes == [3]
+    ring.flush()  # nothing cached: no extra writeback event is recorded
+    ring.flush()
+    assert ring.writebacks == 1 and ring.writeback_sizes == [3]
+
+
+def test_deliver_burst_drop_accounting_mid_burst():
+    """A burst that overruns the free descriptors drops exactly the tail and
+    conserves counts: delivered + dropped == offered."""
+    ring = RxDescriptorRing(8, writeback_threshold=4)
+    ring.nic_deliver_burst(np.arange(5, dtype=np.int64), np.full(5, 10, np.int32))
+    accepted = ring.nic_deliver_burst(np.arange(100, 106, dtype=np.int64),
+                                      np.full(6, 10, np.int32))
+    assert accepted == 3
+    assert ring.delivered == 8
+    assert ring.dropped == 3
+    assert ring.delivered + ring.dropped == 11
+    # the accepted prefix is intact (order preserved through the overflow)
+    ring.flush()
+    s, _ = ring.poll_burst(8)
+    assert list(s) == [0, 1, 2, 3, 4, 100, 101, 102]
+
+
+def test_byte_counters_are_int64_safe():
+    """Multi-million-packet runs overflow int32 byte sums; counters must
+    accumulate exactly (numpy reductions forced to int64)."""
+    ring = RxDescriptorRing(4096, writeback_threshold=None)
+    tx = TxDescriptorRing(4096)
+    big = np.full(4096, 2**31 - 1, np.int32)  # 4096 * (2^31-1) >> int32/uint32
+    slots = np.arange(4096, dtype=np.int64)
+    assert ring.nic_deliver_burst(slots, big) == 4096
+    assert ring.delivered_bytes == 4096 * (2**31 - 1)
+    assert tx.post_burst_vec(slots, big) == 4096
+    assert tx.posted_bytes == 4096 * (2**31 - 1)
+    tx.drain_burst(4096)
+    assert tx.transmitted_bytes == 4096 * (2**31 - 1)

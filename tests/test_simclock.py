@@ -42,6 +42,50 @@ def test_event_scheduler_fifo_tiebreak_and_order():
     assert sched.clock.now_ns == 20
 
 
+def test_event_scheduler_cancel_token():
+    """Timer primitives: schedule returns a token; cancel prevents firing,
+    reports whether the event was still pending, and keeps len() live-only."""
+    sched = EventScheduler()
+    fired = []
+    t1 = sched.schedule_at(10, lambda: fired.append("a"))
+    t2 = sched.schedule_at(20, lambda: fired.append("b"))
+    t3 = sched.schedule_in(30, lambda: fired.append("c"))
+    assert len(sched) == 3
+    assert sched.cancel(t2) is True
+    assert sched.cancel(t2) is False  # already cancelled
+    assert len(sched) == 2
+    sched.run_all()
+    assert fired == ["a", "c"]
+    assert sched.cancel(t1) is False  # already fired
+    assert sched.cancel(t3) is False
+    assert len(sched) == 0
+
+
+def test_event_scheduler_cancelled_head_never_fires():
+    """A cancelled earliest event must not gate next_time_ns or run_until
+    (a tombstoned head used to make run_until fire events beyond t_ns)."""
+    sched = EventScheduler()
+    fired = []
+    tok = sched.schedule_at(5, lambda: fired.append("dead"))
+    sched.schedule_at(50, lambda: fired.append("live"))
+    sched.cancel(tok)
+    assert sched.next_time_ns() == 50
+    assert sched.run_until(10) == 0  # the 50ns event must NOT fire early
+    assert fired == []
+    assert sched.run_until(60) == 1
+    assert fired == ["live"]
+
+
+def test_event_scheduler_cancel_churn_compacts():
+    """Arm/cancel churn (per-packet writeback timers) must not grow the heap
+    unboundedly: tombstones are compacted once they dominate."""
+    sched = EventScheduler()
+    for i in range(10_000):
+        sched.cancel(sched.schedule_at(1_000_000 + i, lambda: None))
+    assert len(sched) == 0
+    assert len(sched._heap) <= 64
+
+
 def test_wire_serialization_and_fifo_queueing():
     w = Wire(gbps=10.0, latency_ns=500)  # 10 Gbps: 1250B == 1000 ns
     assert w.serialization_ns(1250) == 1000
