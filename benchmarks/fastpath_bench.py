@@ -1,0 +1,114 @@
+"""Fast-path throughput tracking: simulated packets/sec, event vs epoch vs
+jit-epoch, on the fig3a-style 100 GbE single-host trial (ISSUE 6 acceptance:
+epoch >= 50x event), plus the event/epoch report-parity check.
+
+Emits the usual CSV rows and a machine-readable ``BENCH_fastpath.json`` so
+speedups are tracked PR-over-PR.  Runnable standalone for CI::
+
+    PYTHONPATH=src python -m benchmarks.fastpath_bench --quick
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, Optional
+
+from repro.exp import TrafficConfig, run_experiment
+
+from .common import emit, experiment_config
+
+# the sustaining 100 GbE shape: 8 RSS queues on 8 lcores keeps per-lcore
+# service (~551 ns per 1518B pkt) under the 8-way-split arrival rate, so the
+# run stays in the fast-path regime (no ring fill, no drops) on both engines
+BENCH_KW = dict(stack="bypass", nports=1, n_queues=8, n_lcores=8, ring=1024,
+                writeback_threshold=32, burst=64, pool_slots=16384)
+RATE_GBPS = 100.0
+PACKET_SIZE = 1518
+
+
+def _cfg(engine: str, duration_s: float):
+    return experiment_config(
+        name=f"fastpath-{engine}",
+        traffic=TrafficConfig(mode="open_loop", rate_gbps=RATE_GBPS,
+                              packet_size=PACKET_SIZE, duration_s=duration_s,
+                              engine=engine),
+        **BENCH_KW)
+
+
+def _run(engine: str, duration_s: float) -> Dict[str, float]:
+    t0 = time.perf_counter()
+    rep = run_experiment(_cfg(engine, duration_s))
+    wall = time.perf_counter() - t0
+    return {"duration_s": duration_s, "packets": float(rep.sent),
+            "received": float(rep.received), "wall_s": wall,
+            "sim_pkts_per_s": rep.sent / wall if wall > 0 else 0.0}
+
+
+def _report_key(rep):
+    lat = None if rep.latency is None else rep.latency.as_dict()
+    return (rep.offered_gbps, rep.achieved_gbps, rep.achieved_mpps, rep.sent,
+            rep.received, rep.dropped, lat, sorted(rep.extras.items()))
+
+
+def parity_check(duration_s: float = 0.004) -> bool:
+    """Bit-identical RunReports, event vs epoch, on one bench config."""
+    rep_e = run_experiment(_cfg("event", duration_s))
+    rep_f = run_experiment(_cfg("epoch", duration_s))
+    return _report_key(rep_e) == _report_key(rep_f)
+
+
+def run(out_json: Optional[str] = "BENCH_fastpath.json",
+        quick: bool = False) -> Dict[str, object]:
+    # the event loop pays per-packet Python rounds, so it gets a shorter
+    # virtual window; pkts/s normalizes wall cost per simulated packet
+    event_s = 0.004 if quick else 0.02
+    epoch_s = 0.02 if quick else 0.1
+    results = {"event": _run("event", event_s),
+               "epoch": _run("epoch", epoch_s),
+               "epoch-jit": _run("epoch-jit", epoch_s)}
+    base = results["event"]["sim_pkts_per_s"]
+    speedups = {eng: (r["sim_pkts_per_s"] / base if base > 0 else 0.0)
+                for eng, r in results.items()}
+    parity = parity_check()
+    for eng, r in results.items():
+        emit(f"fastpath_{eng}", r["wall_s"] / r["packets"] * 1e6 if
+             r["packets"] else 0.0,
+             f"sim_pkts_per_s={r['sim_pkts_per_s']:.0f};"
+             f"speedup={speedups[eng]:.1f}x")
+    emit("fastpath_parity", 0.0, f"bit_identical={parity}")
+    payload = {
+        "bench": "fastpath",
+        "config": {**BENCH_KW, "rate_gbps": RATE_GBPS,
+                   "packet_size": PACKET_SIZE},
+        "engines": results,
+        "speedup_vs_event": speedups,
+        "parity_bit_identical": parity,
+    }
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_fastpath.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="short windows (CI smoke)")
+    ap.add_argument("--assert-speedup", type=float, default=None,
+                    help="fail unless epoch >= this many x over event")
+    args = ap.parse_args()
+    payload = run(out_json=args.out, quick=args.quick)
+    if not payload["parity_bit_identical"]:
+        raise SystemExit("event/epoch RunReport parity check FAILED")
+    if (args.assert_speedup is not None
+            and payload["speedup_vs_event"]["epoch"] < args.assert_speedup):
+        raise SystemExit(
+            f"epoch speedup {payload['speedup_vs_event']['epoch']:.1f}x "
+            f"< required {args.assert_speedup}x")
+
+
+if __name__ == "__main__":
+    main()

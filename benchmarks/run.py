@@ -6,14 +6,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["fig3a", "fig3b", "fig4", "incast", "latency",
-                             "kernels", "roofline"])
+                             "kernels", "roofline", "fastpath"])
     # VIRTUAL seconds per MSB trial since the SimClock refactor: a few ms of
     # simulated traffic is statistically plenty and runs fast at any rate
     ap.add_argument("--trial-s", type=float, default=0.004)
     args = ap.parse_args()
 
-    from . import (fig3a_scalability, fig3b_sensitivity, fig4_dca_burst,
-                   fig_incast, kernels_bench, roofline, tbl_latency)
+    from . import (fastpath_bench, fig3a_scalability, fig3b_sensitivity,
+                   fig4_dca_burst, fig_incast, kernels_bench, roofline,
+                   tbl_latency)
 
     sections = [
         ("fig3a", lambda: fig3a_scalability.run(trial_s=args.trial_s)),
@@ -23,6 +24,7 @@ def main() -> None:
         ("latency", tbl_latency.run),
         ("kernels", kernels_bench.run),
         ("roofline", roofline.run),
+        ("fastpath", lambda: fastpath_bench.run(quick=True)),
     ]
     print("name,us_per_call,derived")
     for name, fn in sections:

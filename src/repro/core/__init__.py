@@ -5,6 +5,7 @@ from .dataplane import BypassDataplane, FeedStats, KernelStackFeed, make_feed
 from .dca import BurstPlan, OccupancyTrace, run_burst_experiment
 from .descriptor import RxDescriptorRing, TxDescriptorRing, STATUS_DONE, STATUS_FREE
 from .ethdev import EthConf, EthDev, EthDevError, EthDevState, EthStats
+from .fastpath import EpochRunInfo, run_epoch_sim
 from .kernel_stack import KernelStackServer, KernelStats
 from .loadgen import LoadGen, TrafficPattern, find_max_sustainable_bandwidth
 from .netstack import Lcore, NetworkStack, ServerStats
@@ -53,6 +54,7 @@ from .telemetry import (LatencyRecorder, LatencyStats, QueueTelemetry,
 
 __all__ = [
     "BypassDataplane", "BypassL2FwdServer", "BurstPlan", "EthConf", "EthDev",
+    "EpochRunInfo",
     "EthDevError", "EthDevState", "EthStats", "EventScheduler", "FeedStats",
     "HostCostModel", "KernelStackFeed", "KernelStackServer", "KernelStats",
     "LatencyRecorder", "LatencyStats", "Lcore", "LoadGen", "NetworkStack",
@@ -67,7 +69,8 @@ __all__ = [
     "payload_checksum", "read_dst_ip", "read_flow",
     "read_flow_bytes", "read_flow_bytes_vec", "read_seq", "read_stamp",
     "rss_skew",
-    "run_burst_experiment", "spin_ns", "stamp", "swap_flow_ips",
+    "run_burst_experiment", "run_epoch_sim", "spin_ns", "stamp",
+    "swap_flow_ips",
     "swap_flow_ips_vec", "swap_macs",
     "toeplitz_hash", "toeplitz_hash_vec", "write_flow", "write_flow_ids_vec",
     "write_seq", "writeback_extras",

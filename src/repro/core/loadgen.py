@@ -168,6 +168,12 @@ class _Flight:
     sent: int = 0
     received: int = 0
     integrity_errors: int = 0
+    # emissions that found the generator out of buffers: counted as sent
+    # (offered load) but never put on a wire.  Without this counter the
+    # loss shows up as generic "dropped" with nothing attributing it —
+    # pool-level ``alloc_failures`` (rx_nombuf) aggregates every consumer
+    # of the pool, not the generator's own starvation.
+    alloc_failures: int = 0
     checksums: dict = field(default_factory=dict)
 
 
@@ -246,6 +252,7 @@ class LoadGen:
         if slot is None:
             # Generator out of buffers == system not recycling fast enough.
             self.flight.sent += 1
+            self.flight.alloc_failures += 1
             return False
         self._write_frame(port.pool, slot, size, now_ns, rng)
         self.flight.sent += 1
@@ -257,6 +264,8 @@ class LoadGen:
         """Vectorized burst emit (non-integrity fast path). Returns #delivered."""
         slots = port.pool.alloc_burst(n)
         self.flight.sent += n
+        if len(slots) < n:
+            self.flight.alloc_failures += n - len(slots)
         if not slots:
             return 0
         slots_arr = np.asarray(slots, dtype=np.int64)
@@ -328,6 +337,7 @@ class LoadGen:
         slot = pool.alloc()
         self.flight.sent += 1
         if slot is None:
+            self.flight.alloc_failures += 1
             return None
         seq = self._write_frame(pool, slot, size, stamp_ns, rng,
                                 record_checksum=False)
@@ -469,6 +479,10 @@ class LoadGen:
                                       rng if use_rng_payload else None)
                     arrival = fwd[i % nports].transmit(t_emit, size)
                     on_wire[i % nports].append((arrival, slot, size))
+                else:
+                    # out of buffers: the emission still counts as offered
+                    # load, but attribute the vanished frame explicitly
+                    self.flight.alloc_failures += 1
                 i += 1
                 moved += 1
             # 2) wire arrivals due: NIC-side delivery (RSS steering; ring
@@ -604,6 +618,8 @@ class LoadGen:
             histogram=self.latency.histogram(),
         )
         rep.extras["integrity_errors"] = float(self.flight.integrity_errors)
+        # generator buffer starvation (offered load that never hit a wire)
+        rep.extras["loadgen_alloc_failures"] = float(self.flight.alloc_failures)
         # per-RX-ring descriptor-writeback telemetry (the Fig. 4 observable)
         rep.extras.update(writeback_extras(self.ports))
         # per-queue NIC-side accounting (the RSS-skew observable); only
@@ -634,6 +650,7 @@ def find_max_sustainable_bandwidth(
     refine_iters: int = 5,
     pattern_kind: str = "uniform",
     sim_time: Optional[bool] = None,
+    engine: str = "event",
 ) -> Tuple[float, List[RunReport]]:
     """EtherLoadGen bandwidth-test mode: "gradually increases the bandwidth to
     find the maximum sustainable bandwidth ... without packet drops."
@@ -650,7 +667,11 @@ def find_max_sustainable_bandwidth(
     ``sim_time``: True runs each trial in virtual time (deterministic,
     host-independent — the default through :mod:`repro.exp`); False forces
     wall-clock; None auto-detects (virtual when the factory's server carries
-    an attached :class:`SimClock`).  Returns (msb_gbps, all trial reports).
+    an attached :class:`SimClock`).  ``engine`` selects the virtual-time
+    execution engine per trial: ``"event"`` (the per-event loop),
+    ``"epoch"`` (the epoch-batched fast path of
+    :mod:`repro.core.fastpath`, bit-identical reports), or ``"epoch-jit"``
+    (same, with the JAX kernel).  Returns (msb_gbps, all trial reports).
     """
 
     reports: List[RunReport] = []
@@ -664,7 +685,12 @@ def find_max_sustainable_bandwidth(
         if use_sim is None:
             use_sim = getattr(server, "clock", None) is not None
         if use_sim:
-            rep = lg.run_sim(server, pattern, duration_s=trial_s)
+            if engine in ("epoch", "epoch-jit"):
+                from .fastpath import run_epoch_sim  # avoid import cycle
+                rep = run_epoch_sim(lg, server, pattern, duration_s=trial_s,
+                                    use_jax=(engine == "epoch-jit"))
+            else:
+                rep = lg.run_sim(server, pattern, duration_s=trial_s)
         else:
             rep = lg.run(server, pattern, duration_s=trial_s)
         reports.append(rep)

@@ -22,6 +22,7 @@ from repro.core.packet import DEFAULT_MTU, DEFAULT_TS_OFFSET
 from repro.core.rss import DEFAULT_TABLE_SIZE
 
 TRAFFIC_MODES = ("open_loop", "closed_loop", "msb")
+TRAFFIC_ENGINES = ("event", "epoch", "epoch-jit")
 
 
 def _plain(value: Any) -> Any:
@@ -169,12 +170,26 @@ class DcaConfig:
     writeback_threshold: Optional[int] = 32
     writeback_timeout_ns: int = 200_000
     per_lcore_bursts: Optional[Tuple[int, ...]] = None
+    # per-RX-queue writeback thresholds (index == queue id); entries override
+    # ``writeback_threshold`` for their queue, ``None`` entries fall through
+    # to it.  Must match the port's queue count — validated where the config
+    # meets a PortConfig (ExperimentConfig/NodeConfig __post_init__).
+    per_queue_writeback_thresholds: Optional[Tuple[Optional[int], ...]] = None
 
     def __post_init__(self) -> None:
         if self.burst_size < 1:
             raise ValueError("burst_size must be >= 1")
         if self.writeback_threshold is not None and self.writeback_threshold < 1:
             raise ValueError("writeback_threshold must be >= 1 or None")
+        if self.per_queue_writeback_thresholds is not None:
+            if len(self.per_queue_writeback_thresholds) == 0:
+                raise ValueError(
+                    "per_queue_writeback_thresholds must be nonempty or None")
+            for q, thr in enumerate(self.per_queue_writeback_thresholds):
+                if thr is not None and thr < 1:
+                    raise ValueError(
+                        f"per_queue_writeback_thresholds[{q}]={thr} "
+                        "must be >= 1 or None")
         if self.writeback_timeout_ns < 1:
             # 0 would mean "never flush" at the NIC timer but "give up
             # immediately" at the PMD — opposite semantics for one knob.
@@ -194,6 +209,30 @@ class DcaConfig:
             return max(self.per_lcore_bursts)
         return self.burst_size
 
+    def threshold_for(self, queue_id: int) -> Optional[int]:
+        """The effective writeback threshold for one RX queue: the per-queue
+        entry when set (and not None), else the global threshold."""
+        if self.per_queue_writeback_thresholds is not None:
+            if not 0 <= queue_id < len(self.per_queue_writeback_thresholds):
+                raise ValueError(
+                    f"queue_id={queue_id} out of range for "
+                    f"{len(self.per_queue_writeback_thresholds)} per-queue "
+                    "writeback thresholds")
+            per_q = self.per_queue_writeback_thresholds[queue_id]
+            if per_q is not None:
+                return per_q
+        return self.writeback_threshold
+
+    def validate_queues(self, n_queues: int, what: str) -> None:
+        """A per-queue threshold list must cover the port's queues exactly —
+        a silent length mismatch would leave queues on the wrong knob."""
+        if (self.per_queue_writeback_thresholds is not None
+                and len(self.per_queue_writeback_thresholds) != n_queues):
+            raise ValueError(
+                f"dca.per_queue_writeback_thresholds has "
+                f"{len(self.per_queue_writeback_thresholds)} entries but "
+                f"{what} port has n_queues={n_queues}")
+
     def validate_ring(self, ring_size: int, what: str) -> None:
         """A threshold or accumulation burst larger than the ring can never
         be reached — the sweep knob would silently degenerate to
@@ -203,6 +242,12 @@ class DcaConfig:
             raise ValueError(
                 f"dca.writeback_threshold={self.writeback_threshold} "
                 f"exceeds {what} ring_size={ring_size}")
+        if self.per_queue_writeback_thresholds is not None:
+            for q, thr in enumerate(self.per_queue_writeback_thresholds):
+                if thr is not None and thr > ring_size:
+                    raise ValueError(
+                        f"dca.per_queue_writeback_thresholds[{q}]={thr} "
+                        f"exceeds {what} ring_size={ring_size}")
         if self.max_burst() > ring_size:
             raise ValueError(
                 f"dca burst_size={self.max_burst()} exceeds {what} "
@@ -217,6 +262,9 @@ class DcaConfig:
         d = dict(d)
         if d.get("per_lcore_bursts") is not None:
             d["per_lcore_bursts"] = tuple(d["per_lcore_bursts"])
+        if d.get("per_queue_writeback_thresholds") is not None:
+            d["per_queue_writeback_thresholds"] = tuple(
+                d["per_queue_writeback_thresholds"])
         return cls(**d)
 
 
@@ -312,11 +360,20 @@ class TrafficConfig:
     results are deterministic and host-independent, and host costs are
     charged to lcore busy-time.  Turn it off to pace against the host clock
     (the seed behaviour) for host-overhead studies.
+
+    ``engine`` picks how virtual-time open-loop trials are advanced:
+    ``"epoch"`` (default) runs the epoch-batched fast path
+    (:func:`repro.core.fastpath.run_epoch_sim` — whole-array passes,
+    bit-identical reports, automatic fallback to the event loop for configs
+    it cannot prove exact); ``"epoch-jit"`` additionally jit-compiles the
+    inner pass with JAX when available; ``"event"`` forces the per-event
+    reference loop.  Ignored in wall-clock mode.
     """
 
     mode: str = "open_loop"
     packet_size: int = 1518
     sim_time: bool = True
+    engine: str = "epoch"
     # open_loop
     rate_gbps: float = 1.0
     kind: str = "uniform"                    # uniform | poisson | bursty
@@ -343,6 +400,9 @@ class TrafficConfig:
     def __post_init__(self) -> None:
         if self.mode not in TRAFFIC_MODES:
             raise ValueError(f"traffic mode must be one of {TRAFFIC_MODES}")
+        if self.engine not in TRAFFIC_ENGINES:
+            raise ValueError(
+                f"traffic engine must be one of {TRAFFIC_ENGINES}")
         if self.kind not in TRAFFIC_KINDS:
             raise ValueError(f"traffic kind must be one of {TRAFFIC_KINDS}")
         if self.packet_size < 64:
@@ -383,6 +443,7 @@ class ExperimentConfig:
                     "traffic.sim_time=True")
             for p in self.ports:
                 self.dca.validate_ring(p.ring_size, "a port's")
+                self.dca.validate_queues(p.n_queues, "a")
 
     def to_dict(self) -> Dict[str, Any]:
         return _config_to_dict(self)
@@ -462,6 +523,7 @@ class NodeConfig:
             raise ValueError("ip must be a u32 (0 == auto-assign)")
         if self.dca is not None:
             self.dca.validate_ring(self.port.ring_size, "the node's")
+            self.dca.validate_queues(self.port.n_queues, "the node's")
 
     def to_dict(self) -> Dict[str, Any]:
         return _config_to_dict(self)

@@ -17,7 +17,7 @@ from typing import Callable, List, Tuple
 import numpy as np
 
 from repro.core import (EthDev, NetworkStack, RunReport, TrafficPattern,
-                        find_max_sustainable_bandwidth)
+                        find_max_sustainable_bandwidth, run_epoch_sim)
 
 from .config import ExperimentConfig, TopologyConfig
 from .testbed import Testbed
@@ -54,6 +54,14 @@ def run_testbed(tb: Testbed) -> RunReport:
                                  packet_size=t.packet_size, kind=t.kind,
                                  burst_len=t.burst_len, seed=t.seed)
         if tb.clock is not None:
+            if t.engine in ("epoch", "epoch-jit"):
+                # bit-identical fast path; configs it cannot prove exact
+                # (timers, DCA accumulate, custom stacks) fall back to the
+                # event loop inside run_epoch_sim, so the report never changes
+                return run_epoch_sim(tb.loadgen, tb.server, pattern,
+                                     duration_s=t.duration_s, clock=tb.clock,
+                                     sched=tb.sched,
+                                     use_jax=(t.engine == "epoch-jit"))
             return tb.loadgen.run_sim(tb.server, pattern,
                                       duration_s=t.duration_s, clock=tb.clock,
                                       sched=tb.sched)
@@ -78,6 +86,7 @@ def run_experiment(cfg: ExperimentConfig) -> RunReport:
         refine_iters=t.refine_iters,
         pattern_kind=t.kind,
         sim_time=t.sim_time,
+        engine=t.engine,
     )
     good = [r for r in reports
             if r.drop_pct <= t.drop_tolerance_pct and r.received > 0]

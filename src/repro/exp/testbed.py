@@ -65,10 +65,13 @@ def effective_stack_config(stack: StackConfig,
 
 
 def effective_writeback_threshold(dca: Optional[DcaConfig],
-                                  legacy: Optional[int]) -> Optional[int]:
-    """The RX rings' writeback threshold: the DcaConfig centralizes the
-    descriptor-path knobs and overrides the per-port legacy value."""
-    return dca.writeback_threshold if dca is not None else legacy
+                                  legacy: Optional[int],
+                                  queue_id: int = 0) -> Optional[int]:
+    """One RX ring's writeback threshold: the DcaConfig centralizes the
+    descriptor-path knobs and overrides the per-port legacy value; a
+    per-queue entry (``dca.per_queue_writeback_thresholds``) in turn
+    overrides the DcaConfig-global threshold for its queue."""
+    return dca.threshold_for(queue_id) if dca is not None else legacy
 
 
 def apply_dca(dca: Optional[DcaConfig], devs: Sequence[EthDev],
@@ -131,15 +134,14 @@ class Testbed:
         pool = PacketPool(cfg.pool.n_slots, cfg.pool.slot_size)
         devs: List[EthDev] = []
         for dev_id, pc in enumerate(cfg.ports):
-            threshold = effective_writeback_threshold(cfg.dca,
-                                                      pc.writeback_threshold)
             dev = EthDev(pool, dev_id=dev_id).configure(EthConf(
                 n_rx_queues=pc.n_queues, n_tx_queues=pc.n_queues,
                 rss_key=pc.rss.key, rss_table_size=pc.rss.table_size,
                 link_gbps=pc.link.gbps, link_latency_ns=pc.link.latency_ns))
             for q in range(pc.n_queues):
-                dev.rx_queue_setup(q, pc.ring_size,
-                                   writeback_threshold=threshold)
+                thr = effective_writeback_threshold(
+                    cfg.dca, pc.writeback_threshold, q)
+                dev.rx_queue_setup(q, pc.ring_size, writeback_threshold=thr)
                 dev.tx_queue_setup(q, pc.ring_size)
             devs.append(dev.dev_start())
         server = build_stack(effective_stack_config(cfg.stack, cfg.dca), devs)

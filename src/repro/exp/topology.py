@@ -144,12 +144,11 @@ class Cluster:
                 n_rx_queues=nc.port.n_queues, n_tx_queues=nc.port.n_queues,
                 rss_key=nc.port.rss.key,
                 rss_table_size=nc.port.rss.table_size))
-            threshold = effective_writeback_threshold(
-                nc.dca, nc.port.writeback_threshold)
             for q in range(nc.port.n_queues):
                 dev.rx_queue_setup(
                     q, nc.port.ring_size,
-                    writeback_threshold=threshold)
+                    writeback_threshold=effective_writeback_threshold(
+                        nc.dca, nc.port.writeback_threshold, q))
                 dev.tx_queue_setup(q, nc.port.ring_size)
             dev.dev_start()
             server = build_stack(effective_stack_config(nc.stack, nc.dca), [dev])

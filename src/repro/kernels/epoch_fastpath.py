@@ -1,0 +1,167 @@
+"""Epoch fast-path array kernels: the pure-array inner pass of the
+epoch-batched simulation engine (:mod:`repro.core.fastpath`).
+
+One epoch slice of the analytic emission schedule is advanced as whole-array
+passes instead of per-event Python rounds:
+
+* **emission → arrival**: the FIFO wire recursion
+  ``end_i = max(end_{i-1}, t_i) + ser_i`` is a max-plus scan.  With
+  ``S_i = cumsum(ser)_i`` it closes to
+  ``end_i = max(busy0, cummax_j<=i(t_j - S_{j-1})) + S_i`` — one cumsum and
+  one cummax, bit-identical to :meth:`repro.core.simclock.Wire.transmit`
+  called per frame (serialization uses the same ``round(bytes*8/gbps)``
+  half-to-even float64 arithmetic);
+* **steer**: the per-frame RSS queue is a gather through a precomputed
+  per-flow-id queue table (the Toeplitz hash + indirection lookup of
+  :meth:`repro.core.rss.RssIndirection.steer` hoisted out of the per-packet
+  path — the loadgen's synthetic flow ids cycle mod ``n_flows``);
+* **charge**: per-burst lcore busy-time ``(poll + n*per_packet)/ghz`` as a
+  vectorized cost table, consumed by the harvest cascade.
+
+The numpy implementation is the portable reference and the default.  The JAX
+variant jit-compiles the same integer scan; it is only *used* when 64-bit
+mode is available (``jax_enable_x64``), because the engine's contract is
+bit-identical timestamps and int32 would overflow ns arithmetic.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "serialization_ns_vec",
+    "wire_arrival_pass_np",
+    "epoch_pass_np",
+    "pmd_burst_cost_table",
+    "get_epoch_pass_jax",
+]
+
+
+def serialization_ns_vec(lengths: np.ndarray, gbps: float) -> np.ndarray:
+    """Per-frame serialization delay, matching ``Wire.serialization_ns``
+    element-for-element (``int(round(bytes*8/gbps))``, half-to-even)."""
+    if gbps <= 0.0:
+        return np.zeros(len(lengths), dtype=np.int64)
+    return np.round(np.asarray(lengths, dtype=np.float64) * 8.0
+                    / gbps).astype(np.int64)
+
+
+def wire_arrival_pass_np(
+    handed_ns: np.ndarray, ser_ns: np.ndarray, busy0_ns: int, latency_ns: int,
+) -> Tuple[np.ndarray, int]:
+    """Arrival times of frames handed one-at-a-time to a FIFO wire.
+
+    ``handed_ns`` must be non-decreasing (the emission schedule is).  Returns
+    ``(arrivals, busy_until)`` — exactly what N sequential
+    ``Wire.transmit(t_i, size_i)`` calls would produce.
+    """
+    n = len(handed_ns)
+    if n == 0:
+        return np.empty(0, dtype=np.int64), int(busy0_ns)
+    handed = np.asarray(handed_ns, dtype=np.int64)
+    ser = np.asarray(ser_ns, dtype=np.int64)
+    cum = np.cumsum(ser)
+    # end_i = max(busy0, max_{j<=i}(t_j - S_{j-1})) + S_i ; S_{-1} = 0
+    pre = handed - (cum - ser)
+    m = np.maximum(np.maximum.accumulate(pre), np.int64(busy0_ns))
+    ends = m + cum
+    return ends + np.int64(latency_ns), int(ends[-1])
+
+
+def epoch_pass_np(
+    handed_ns: np.ndarray,
+    ser_ns: np.ndarray,
+    busy0_ns: int,
+    latency_ns: int,
+    flow_queue_table: Optional[np.ndarray],
+    flow_ids: Optional[np.ndarray],
+) -> Tuple[np.ndarray, int, Optional[np.ndarray]]:
+    """One epoch slice: wire arrivals + RSS steering in one pass.
+
+    Returns ``(arrival_ns, busy_until, queue_idx)``; ``queue_idx`` is None
+    for single-queue ports (no steering).
+    """
+    arrivals, busy = wire_arrival_pass_np(handed_ns, ser_ns, busy0_ns,
+                                          latency_ns)
+    queues = None
+    if flow_queue_table is not None and flow_ids is not None:
+        queues = flow_queue_table[flow_ids]
+    return arrivals, busy, queues
+
+
+def pmd_burst_cost_table(max_burst: int, poll_cycles: int,
+                         per_packet_cycles: int, cpu_ghz: float) -> np.ndarray:
+    """``cost[n] = pmd_burst_ns(n)`` for n in [0, max_burst] — the vectorized
+    charge table the harvest cascade indexes per burst (float64, identical
+    arithmetic to :meth:`repro.core.cost.HostCostModel.pmd_burst_ns`)."""
+    n = np.arange(max_burst + 1, dtype=np.float64)
+    table = (poll_cycles + n * per_packet_cycles) / cpu_ghz
+    table[0] = 0.0
+    return table
+
+
+_JAX_PASS = None
+_JAX_TRIED = False
+
+
+def get_epoch_pass_jax():
+    """The jit-compiled epoch pass, or None when JAX (with 64-bit integer
+    mode) is unavailable.  Signature matches :func:`epoch_pass_np`.
+
+    The serialization rounding stays in numpy (cheap, and Python/numpy
+    half-to-even is the reference); the jitted part is the integer max-plus
+    scan + steering gather — exact in int64, so results are bit-identical to
+    the numpy pass and the engine can treat the two as interchangeable.
+    """
+    global _JAX_PASS, _JAX_TRIED
+    if _JAX_TRIED:
+        return _JAX_PASS
+    _JAX_TRIED = True
+    try:
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        @jax.jit
+        def _scan(handed, ser, busy0, latency):
+            cum = jnp.cumsum(ser)
+            pre = handed - (cum - ser)
+            m = jnp.maximum(jax.lax.cummax(pre), busy0)
+            ends = m + cum
+            return ends + latency, ends[-1]
+
+        @jax.jit
+        def _gather(table, ids):
+            return table[ids]
+
+        def epoch_pass_jax(handed_ns, ser_ns, busy0_ns, latency_ns,
+                           flow_queue_table, flow_ids):
+            if len(handed_ns) == 0:
+                return np.empty(0, dtype=np.int64), int(busy0_ns), None
+            # 64-bit mode is scoped to this call: ns timestamps overflow
+            # int32, and the engine's contract is bit-identical results
+            with enable_x64():
+                arr, busy = _scan(jnp.asarray(handed_ns, dtype=jnp.int64),
+                                  jnp.asarray(ser_ns, dtype=jnp.int64),
+                                  jnp.int64(busy0_ns), jnp.int64(latency_ns))
+                queues = None
+                if flow_queue_table is not None and flow_ids is not None:
+                    queues = np.asarray(_gather(
+                        jnp.asarray(flow_queue_table), jnp.asarray(flow_ids)))
+                arr = np.asarray(arr)
+                busy = int(busy)
+            return arr, busy, queues
+
+        # smoke-verify exactness against the reference once, on a case with
+        # wire queueing; any divergence (e.g. x64 quietly off) disables JAX
+        h = np.array([0, 5, 5, 40], dtype=np.int64)
+        s = np.array([10, 10, 10, 10], dtype=np.int64)
+        want, wb = wire_arrival_pass_np(h, s, 3, 7)
+        got, gb, _ = epoch_pass_jax(h, s, 3, 7, None, None)
+        if not (np.array_equal(want, got) and wb == gb):  # pragma: no cover
+            return None
+        _JAX_PASS = epoch_pass_jax
+    except Exception:  # pragma: no cover - jax not installed / broken
+        _JAX_PASS = None
+    return _JAX_PASS

@@ -1,0 +1,325 @@
+"""Epoch-batched fast path (ISSUE 6): bit-identical RunReports vs the event
+loop, epoch-slicing invariants, per-queue writeback thresholds, and the
+alloc-failure attribution bugfix.
+
+The engine's contract is absolute: for every config, ``engine="epoch"``
+produces the same RunReport as ``engine="event"`` — either through the
+closed-form fast path (validated pure, committed atomically) or by falling
+back to the event loop itself.  These tests pin both halves: fast-path
+configs must *stay on* the fast path (and match bit-for-bit), unsupported
+configs must fall back (and trivially match).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (BypassL2FwdServer, EpochRunInfo, LoadGen, PacketPool,
+                        Port, SimClock, TrafficPattern, run_epoch_sim)
+from repro.core.fastpath import default_epoch_ns, iter_epoch_slices
+from repro.exp import (DcaConfig, ExperimentConfig, NodeConfig, PoolConfig,
+                       PortConfig, StackConfig, TopologyConfig, TrafficConfig,
+                       Testbed, run_experiment)
+from repro.exp.testbed import effective_writeback_threshold
+from repro.exp.topology import Cluster
+
+
+def build(n_queues=4, ring=1024, wb=32, burst=64, n_lcores=4, gbps=40.0,
+          lat=1000, pool_slots=8192, nports=1):
+    pools = [PacketPool(pool_slots, 2048) for _ in range(nports)]
+    ports = [Port.make(pools[i], ring_size=ring, writeback_threshold=wb,
+                       n_queues=n_queues, link_gbps=gbps, link_latency_ns=lat)
+             for i in range(nports)]
+    server = BypassL2FwdServer(ports, burst_size=burst, n_lcores=n_lcores)
+    clock = SimClock()
+    server.attach_clock(clock)
+    return server, ports, clock
+
+
+def report_key(rep):
+    """Every observable in a RunReport, comparable bit-for-bit."""
+    lat = None if rep.latency is None else rep.latency.as_dict()
+    return (rep.offered_gbps, rep.achieved_gbps, rep.achieved_mpps, rep.sent,
+            rep.received, rep.dropped, lat,
+            tuple(tuple(sorted(h.items())) for h in rep.histogram),
+            tuple(sorted(rep.extras.items())))
+
+
+def queue_stats_key(server):
+    return {k: (v.rx_packets, v.tx_packets, v.rx_bytes, v.burst_count,
+                v.burst_packets, tuple(v.burst_buckets))
+            for k, v in server.per_queue_stats().items()}
+
+
+def run_pair(pattern, dur, use_jax=False, **kw):
+    """One config, both engines, fresh state each: returns both observations
+    plus the epoch engine's out-of-band info."""
+    server, ports, clock = build(**kw)
+    lg = LoadGen(ports)
+    rep_e = lg.run_sim(server, pattern, duration_s=dur, clock=clock)
+    ev = (report_key(rep_e), queue_stats_key(server), clock.now_ns)
+
+    server2, ports2, clock2 = build(**kw)
+    lg2 = LoadGen(ports2)
+    info = EpochRunInfo()
+    rep_f = run_epoch_sim(lg2, server2, pattern, duration_s=dur, clock=clock2,
+                          use_jax=use_jax, info=info)
+    ep = (report_key(rep_f), queue_stats_key(server2), clock2.now_ns)
+    return ev, ep, info
+
+
+# -- engine equivalence: fast-path configs ------------------------------------
+
+FASTPATH_CASES = [
+    ("uniform-4q", TrafficPattern(rate_gbps=40.0, packet_size=1518),
+     0.002, {}),
+    ("poisson-4q", TrafficPattern(rate_gbps=40.0, packet_size=1518,
+                                  kind="poisson", seed=3), 0.002, {}),
+    ("bursty-4q", TrafficPattern(rate_gbps=40.0, packet_size=1518,
+                                 kind="bursty", burst_len=32), 0.002, {}),
+    ("uniform-1q", TrafficPattern(rate_gbps=2.0, packet_size=1518),
+     0.002, dict(n_queues=1, n_lcores=1)),
+    ("two-ports", TrafficPattern(rate_gbps=40.0, packet_size=1518),
+     0.002, dict(nports=2, n_lcores=8)),
+    ("ideal-wire", TrafficPattern(rate_gbps=40.0, packet_size=1518),
+     0.001, dict(gbps=0.0, lat=0)),
+    ("one-lcore-4q", TrafficPattern(rate_gbps=20.0, packet_size=1518),
+     0.002, dict(n_lcores=1)),
+]
+
+
+@pytest.mark.parametrize("name,pattern,dur,kw", FASTPATH_CASES,
+                         ids=[c[0] for c in FASTPATH_CASES])
+def test_epoch_engine_bit_identical_on_fastpath(name, pattern, dur, kw):
+    ev, ep, info = run_pair(pattern, dur, **kw)
+    assert info.fastpath, info.fallback_reason  # must NOT have fallen back
+    assert info.n_packets > 0
+    assert ev == ep
+
+
+# -- engine equivalence: fallback configs -------------------------------------
+
+FALLBACK_CASES = [
+    # whole-ring writeback (threshold None) couples publishes to ring-full
+    ("wb-none", TrafficPattern(rate_gbps=5.0, packet_size=1518),
+     0.001, dict(wb=None, ring=64)),
+    # 64B @ 100G overloads 4 lcores: the ring genuinely fills (event loop
+    # drops too) — validation must force the event loop, not approximate
+    ("overload-64B-100G", TrafficPattern(rate_gbps=100.0, packet_size=64),
+     0.0005, {}),
+    # one lcore at ~551 ns/pkt cannot keep up with 256B @ 10G (~205 ns/pkt)
+    ("overload-1q", TrafficPattern(rate_gbps=10.0, packet_size=256),
+     0.001, dict(n_queues=1, n_lcores=1)),
+]
+
+
+@pytest.mark.parametrize("name,pattern,dur,kw", FALLBACK_CASES,
+                         ids=[c[0] for c in FALLBACK_CASES])
+def test_epoch_engine_falls_back_and_matches(name, pattern, dur, kw):
+    ev, ep, info = run_pair(pattern, dur, **kw)
+    assert not info.fastpath and info.fallback_reason
+    assert ev == ep
+
+
+def test_epoch_jit_matches_when_available():
+    from repro.kernels.epoch_fastpath import get_epoch_pass_jax
+    if get_epoch_pass_jax() is None:
+        pytest.skip("JAX (with exact int64 pass) unavailable")
+    pattern = TrafficPattern(rate_gbps=40.0, packet_size=1518, kind="poisson",
+                             seed=7)
+    ev, ep, info = run_pair(pattern, 0.002, use_jax=True)
+    assert info.fastpath and info.used_jax
+    assert ev == ep
+
+
+# -- engine equivalence through run_experiment (paper-config shapes) ----------
+
+def _fig_configs():
+    fig3a = ExperimentConfig(
+        name="fig3a-like",
+        pool=PoolConfig(n_slots=16384, slot_size=1518),
+        ports=(PortConfig(n_queues=4, ring_size=1024,
+                          writeback_threshold=32),),
+        stack=StackConfig(kind="bypass", burst_size=64),
+        traffic=TrafficConfig(mode="open_loop", rate_gbps=20.0,
+                              duration_s=0.002))
+    fig3b = fig3a.with_ports(writeback_threshold=128)
+    # fig4-style: sim-time DCA accumulate + writeback-timeout timers — the
+    # epoch engine must detect the armed timers and run the event loop
+    fig4 = ExperimentConfig(
+        name="fig4-like",
+        pool=PoolConfig(n_slots=16384, slot_size=1518),
+        ports=(PortConfig(n_queues=2, ring_size=1024),),
+        stack=StackConfig(kind="bypass", burst_size=32),
+        traffic=TrafficConfig(mode="open_loop", rate_gbps=10.0,
+                              duration_s=0.002, kind="bursty", burst_len=64),
+        dca=DcaConfig(burst_size=64, writeback_threshold=16,
+                      writeback_timeout_ns=50_000))
+    # timeout-timer dominant: threshold too high to cross within a burst
+    timer = fig4.with_dca(writeback_threshold=512, burst_size=32)
+    return [("fig3a", fig3a), ("fig3b", fig3b), ("fig4-dca", fig4),
+            ("timer", timer)]
+
+
+@pytest.mark.parametrize("name,cfg", _fig_configs(),
+                         ids=[n for n, _ in _fig_configs()])
+def test_run_experiment_engine_parity(name, cfg):
+    rep_e = run_experiment(cfg.with_traffic(engine="event"))
+    rep_f = run_experiment(cfg.with_traffic(engine="epoch"))
+    assert report_key(rep_e) == report_key(rep_f)
+
+
+def test_dca_config_forces_fallback():
+    """Armed writeback timers / DCA accumulate are outside the fast-path
+    regime; the engine must refuse them statically (not mis-simulate)."""
+    _, cfg = _fig_configs()[2]
+    tb = Testbed.build(cfg)
+    t = cfg.traffic
+    pattern = TrafficPattern(rate_gbps=t.rate_gbps, packet_size=t.packet_size,
+                             kind=t.kind, burst_len=t.burst_len, seed=t.seed)
+    info = EpochRunInfo()
+    run_epoch_sim(tb.loadgen, tb.server, pattern, duration_s=t.duration_s,
+                  clock=tb.clock, sched=tb.sched, info=info)
+    assert not info.fastpath and info.fallback_reason
+
+
+# -- epoch slicing of the emission schedule -----------------------------------
+
+def _schedules():
+    out = []
+    for kind, seed in [("uniform", 0), ("poisson", 1), ("bursty", 2)]:
+        p = TrafficPattern(rate_gbps=25.0, packet_size=512, kind=kind,
+                           seed=seed, burst_len=16)
+        times, _ = p.emission_schedule(2_000_000,
+                                       np.random.default_rng(seed))
+        out.append((kind, np.sort(times)))
+    return out
+
+
+@pytest.mark.parametrize("kind,times", _schedules(),
+                         ids=[k for k, _ in _schedules()])
+@pytest.mark.parametrize("epoch_ns", [1, 1000, 77_777, 10_000_000])
+def test_epoch_slices_partition_in_order(kind, times, epoch_ns):
+    """No packet lost or reordered at epoch boundaries: the slices are a
+    contiguous, in-order, exhaustive partition of the schedule, and every
+    slice stays inside one epoch window."""
+    slices = list(iter_epoch_slices(times, epoch_ns))
+    assert slices, "nonempty schedule must yield slices"
+    assert slices[0][0] == 0 and slices[-1][1] == len(times)
+    t0 = int(times[0])
+    for (lo, hi), (lo2, _) in zip(slices, slices[1:] + [(len(times), None)]):
+        assert lo < hi, "slices are nonempty"
+        assert hi == lo2, "slices are contiguous (nothing lost or duplicated)"
+        # all times in one slice share the window keyed by its first element
+        k = (int(times[lo]) - t0) // epoch_ns
+        assert (int(times[hi - 1]) - t0) // epoch_ns == k
+    # reassembly is the identity — order preserved
+    joined = np.concatenate([times[lo:hi] for lo, hi in slices])
+    assert np.array_equal(joined, times)
+
+
+def test_epoch_slices_empty_and_degenerate():
+    assert list(iter_epoch_slices(np.empty(0, dtype=np.int64), 100)) == []
+    times = np.array([5, 5, 5], dtype=np.int64)
+    assert list(iter_epoch_slices(times, 10)) == [(0, 3)]
+    # epoch_ns <= 0 degrades to one slice covering everything
+    assert list(iter_epoch_slices(times, 0)) == [(0, 3)]
+
+
+def test_default_epoch_ns_bounds():
+    pool = PacketPool(64, 2048)
+    port = Port.make(pool, link_gbps=100.0, link_latency_ns=1_000)
+    times = np.arange(0, 10_000, 100, dtype=np.int64)
+    e = default_epoch_ns([port], times)
+    assert e >= 1_000  # never below the min link latency (SimBricks bound)
+    # huge schedules get chunked near the 64k-packet target
+    big = np.arange(1 << 20, dtype=np.int64) * 50
+    e_big = default_epoch_ns([port], big)
+    n_slices = len(list(iter_epoch_slices(big, e_big)))
+    assert 2 <= n_slices <= 32
+
+
+# -- per-queue writeback thresholds (satellite) -------------------------------
+
+def test_per_queue_thresholds_validation():
+    with pytest.raises(ValueError, match="2 entries"):
+        ExperimentConfig(ports=(PortConfig(n_queues=4),),
+                         dca=DcaConfig(per_queue_writeback_thresholds=(8, 8)))
+    with pytest.raises(ValueError, match=">= 1 or None"):
+        DcaConfig(per_queue_writeback_thresholds=(0, 1))
+    with pytest.raises(ValueError, match="exceeds"):
+        ExperimentConfig(
+            ports=(PortConfig(n_queues=2, ring_size=64),),
+            dca=DcaConfig(per_queue_writeback_thresholds=(128, 1)))
+    with pytest.raises(ValueError, match="nonempty"):
+        DcaConfig(per_queue_writeback_thresholds=())
+
+
+def test_per_queue_thresholds_fold_through_testbed():
+    cfg = ExperimentConfig(
+        ports=(PortConfig(n_queues=4),),
+        dca=DcaConfig(per_queue_writeback_thresholds=(8, None, 64, 1)))
+    tb = Testbed.build(cfg)
+    thrs = [rq.writeback_threshold for rq in tb.devs[0].rx_queues]
+    # None entries fall through to the DcaConfig-global threshold (32)
+    assert thrs == [8, 32, 64, 1]
+    # round-trips through plain dicts (JSON) exactly
+    assert ExperimentConfig.from_dict(cfg.to_dict()) == cfg
+
+
+def test_per_queue_thresholds_fold_through_topology():
+    cfg = TopologyConfig(
+        nodes=(NodeConfig(
+            name="srv", port=PortConfig(n_queues=2),
+            dca=DcaConfig(per_queue_writeback_thresholds=(4, 16))),),
+        traffic=TrafficConfig(mode="open_loop", duration_s=0.0005))
+    cluster = Cluster.build(cfg)
+    thrs = [rq.writeback_threshold
+            for rq in cluster.nodes[0].dev.rx_queues]
+    assert thrs == [4, 16]
+
+
+def test_effective_writeback_threshold_helper():
+    dca = DcaConfig(writeback_threshold=32,
+                    per_queue_writeback_thresholds=(8, None))
+    assert effective_writeback_threshold(dca, 99, 0) == 8
+    assert effective_writeback_threshold(dca, 99, 1) == 32   # falls through
+    assert effective_writeback_threshold(None, 99, 1) == 99  # legacy
+    with pytest.raises(ValueError, match="out of range"):
+        dca.threshold_for(2)
+
+
+# -- alloc-failure attribution (satellite bugfix) -----------------------------
+
+def test_alloc_failures_attributed_in_report():
+    """A frame that fails pool.alloc() counts toward ``sent`` (offered load)
+    but used to vanish without attribution; it must now show up as
+    ``extras["loadgen_alloc_failures"]``.  4 slots cannot carry a 2000-packet
+    open-loop run, so starvation is guaranteed."""
+    server, ports, clock = build(pool_slots=4, n_queues=1, n_lcores=1)
+    lg = LoadGen(ports)
+    pattern = TrafficPattern(rate_gbps=40.0, packet_size=1518)
+    rep = lg.run_sim(server, pattern, duration_s=0.0005, clock=clock)
+    failures = rep.extras["loadgen_alloc_failures"]
+    assert failures > 0
+    # every failed emission is part of `sent` but never reached a wire:
+    # the unattributed gap this bugfix closes
+    assert failures <= rep.sent - rep.received
+    assert rep.dropped >= failures
+
+
+def test_alloc_failures_zero_on_healthy_run():
+    server, ports, clock = build()
+    lg = LoadGen(ports)
+    pattern = TrafficPattern(rate_gbps=10.0, packet_size=1518)
+    rep = lg.run_sim(server, pattern, duration_s=0.001, clock=clock)
+    assert rep.extras["loadgen_alloc_failures"] == 0.0
+    assert rep.dropped == 0
+
+
+def test_alloc_failure_starved_run_engine_parity():
+    """Buffer starvation is outside the fast-path regime (the plan's pool
+    validation rejects it) — but the fallback keeps reports identical."""
+    pattern = TrafficPattern(rate_gbps=40.0, packet_size=1518)
+    ev, ep, info = run_pair(pattern, 0.0005, pool_slots=4, n_queues=1,
+                            n_lcores=1)
+    assert not info.fastpath
+    assert ev == ep
