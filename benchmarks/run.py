@@ -5,22 +5,23 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=["fig3a", "fig3b", "fig4", "incast", "latency",
-                             "kernels", "roofline", "fastpath"])
+                    choices=["fig3a", "fig3b", "fig4", "incast", "serving",
+                             "latency", "kernels", "roofline", "fastpath"])
     # VIRTUAL seconds per MSB trial since the SimClock refactor: a few ms of
     # simulated traffic is statistically plenty and runs fast at any rate
     ap.add_argument("--trial-s", type=float, default=0.004)
     args = ap.parse_args()
 
     from . import (fastpath_bench, fig3a_scalability, fig3b_sensitivity,
-                   fig4_dca_burst, fig_incast, kernels_bench, roofline,
-                   tbl_latency)
+                   fig4_dca_burst, fig_incast, fig_serving, kernels_bench,
+                   roofline, tbl_latency)
 
     sections = [
         ("fig3a", lambda: fig3a_scalability.run(trial_s=args.trial_s)),
         ("fig3b", lambda: fig3b_sensitivity.run(trial_s=args.trial_s)),
         ("fig4", lambda: fig4_dca_burst.run(duration_s=args.trial_s)),
         ("incast", lambda: fig_incast.run(trial_s=min(args.trial_s, 0.001))),
+        ("serving", lambda: fig_serving.run(trial_s=min(args.trial_s, 0.002))),
         ("latency", tbl_latency.run),
         ("kernels", kernels_bench.run),
         ("roofline", roofline.run),

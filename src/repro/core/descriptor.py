@@ -65,6 +65,13 @@ class RxDescriptorRing:
         self._sched = None            # EventScheduler, via attach_scheduler
         self._timeout_ns = 0
         self._timer: Optional[int] = None  # pending timer token
+        # modeled writeback DMA latency: with a scheduler attached and
+        # _dma_ns > 0, a threshold crossing *starts* a DMA and the
+        # descriptors only become PMD-visible _dma_ns later (0 == the legacy
+        # instantaneous publish, bit-identical to pre-DMA reports)
+        self._dma_ns = 0
+        self._dma_pending = 0         # descriptors in DMA flight
+        self._dma_tokens: List[object] = []  # cancellable completion events
         # stats
         self.delivered = 0
         self.delivered_bytes = 0
@@ -94,7 +101,8 @@ class RxDescriptorRing:
         return self.size if self.writeback_threshold is None else self.writeback_threshold
 
     # -- writeback timeout (ITR analogue) --------------------------------------
-    def attach_scheduler(self, sched, timeout_ns: int) -> "RxDescriptorRing":
+    def attach_scheduler(self, sched, timeout_ns: int,
+                         writeback_dma_ns: int = 0) -> "RxDescriptorRing":
         """Enable the descriptor-cache **writeback timeout** on this ring.
 
         With a scheduler attached, a completion entering an empty cache arms
@@ -103,11 +111,20 @@ class RxDescriptorRing:
         cached completions (one timeout writeback).  This is the interrupt-
         throttling (ITR) analogue the paper's §3.1.4 discussion calls for:
         it bounds the worst-case time a frame sits PMD-invisible.
+
+        ``writeback_dma_ns`` models the DMA transfer itself: a writeback
+        *starts* when the threshold crosses (or the timer fires) but its
+        descriptors only become PMD-visible ``writeback_dma_ns`` later, as a
+        scheduler event.  The default 0 keeps the legacy instantaneous
+        publish, bit-identical to pre-DMA reports.
         """
         if timeout_ns < 0:
             raise ValueError("timeout_ns must be >= 0")
+        if writeback_dma_ns < 0:
+            raise ValueError("writeback_dma_ns must be >= 0")
         self._sched = sched
         self._timeout_ns = int(timeout_ns)
+        self._dma_ns = int(writeback_dma_ns)
         self._update_timer()
         return self
 
@@ -179,18 +196,42 @@ class RxDescriptorRing:
         return take
 
     def _writeback_n(self, k: int) -> None:
-        """Publish the ``k`` oldest cached completions — one DMA burst of
-        descriptor writebacks (the quantity the paper's Fig. 4 shows
-        stressing the cache hierarchy when too large)."""
+        """Start a writeback of the ``k`` oldest cached completions — one DMA
+        burst of descriptor writebacks (the quantity the paper's Fig. 4 shows
+        stressing the cache hierarchy when too large).  With a modeled DMA
+        latency the publish happens ``_dma_ns`` later; otherwise it is
+        immediate."""
         if k <= 0:
             return
+        # the k oldest cached descriptors start right after everything that
+        # has already been published or put in DMA flight:
+        # published + _dma_pending + _cached == head always holds
         start = self.head - self._cached
         idx = (start + np.arange(k)) % self.size
+        self._cached -= k
+        if self._sched is not None and self._dma_ns > 0:
+            self._dma_pending += k
+            self._dma_tokens.append(
+                self._sched.schedule_in(self._dma_ns,
+                                        lambda: self._dma_complete(idx, k)))
+            return
+        self._publish(idx, k)
+
+    def _publish(self, idx: np.ndarray, k: int) -> None:
+        """Make ``k`` descriptors PMD-visible and record the DMA burst."""
         self.status[idx] = STATUS_DONE
         self.writebacks += 1
         self.writeback_sizes.append(k)
-        self._cached -= k
         self.published += k
+
+    def _dma_complete(self, idx: np.ndarray, k: int) -> None:
+        """A writeback DMA lands: its descriptors become PMD-visible.
+        Equal-delay FIFO scheduling means completions land in start order,
+        so the DONE run from ``tail`` stays contiguous."""
+        if self._dma_tokens:
+            self._dma_tokens.pop(0)
+        self._dma_pending -= k
+        self._publish(idx, k)
 
     def _writeback(self) -> None:
         """Publish every cached completion in one DMA burst."""
@@ -199,7 +240,20 @@ class RxDescriptorRing:
     def flush(self) -> None:
         """Explicit full writeback (a stopping NIC publishes its cache; the
         pre-timer event loops also call this on a quiet wire).  Idempotent:
-        an empty cache records no writeback event."""
+        an empty cache records no writeback event.
+
+        Synchronous by contract even with a modeled DMA latency — closed-loop
+        drivers flush without pumping the scheduler, so in-flight DMAs are
+        cancelled and their descriptors published immediately (one burst)."""
+        if self._dma_pending > 0:
+            for tok in self._dma_tokens:
+                self._sched.cancel(tok)
+            self._dma_tokens.clear()
+            k = self._dma_pending
+            start = self.head - self._cached - k
+            idx = (start + np.arange(k)) % self.size
+            self._dma_pending = 0
+            self._publish(idx, k)
         self._writeback()
         self._update_timer()
 

@@ -225,11 +225,15 @@ class EthDev:
         self._state = EthDevState.STOPPED
         return self
 
-    def attach_dca(self, sched, writeback_timeout_ns: int) -> "EthDev":
+    def attach_dca(self, sched, writeback_timeout_ns: int,
+                   writeback_dma_ns: int = 0) -> "EthDev":
         """Arm the descriptor-cache **writeback timeout** (ITR analogue) on
         every RX ring: completions idling in a ring's descriptor cache are
         flushed ``writeback_timeout_ns`` after the first one arrives, as an
-        event on ``sched``.  Call after the queues are set up (a later
+        event on ``sched``.  ``writeback_dma_ns`` additionally models the
+        writeback DMA transfer time — descriptors become PMD-visible that
+        many ns after the threshold crossing (0 == instantaneous, the legacy
+        behaviour).  Call after the queues are set up (a later
         ``configure()`` builds fresh rings and must be re-attached); the
         scheduler is also what the virtual-time load generator drives, so it
         must share the testbed's SimClock."""
@@ -239,7 +243,8 @@ class EthDev:
         self.event_sched = sched
         for ring in self._rx_rings:
             if ring is not None:
-                ring.attach_scheduler(sched, writeback_timeout_ns)
+                ring.attach_scheduler(sched, writeback_timeout_ns,
+                                      writeback_dma_ns)
         return self
 
     def _started_port(self) -> Port:

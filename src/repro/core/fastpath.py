@@ -213,8 +213,10 @@ def _fallback_reason(lg, server, sched) -> Optional[str]:
         for ring in port.rx_queues:
             if ring._sched is not None and ring._timeout_ns > 0:
                 return "writeback-timeout timers armed"
+            if ring._sched is not None and ring._dma_ns > 0:
+                return "writeback DMA latency armed"
             if ring.head != ring.tail or ring.published != ring.tail \
-                    or ring._cached != 0:
+                    or ring._cached != 0 or ring._dma_pending != 0:
                 return "RX ring not idle"
         for ring in port.tx_queues:
             if ring.pending != 0:

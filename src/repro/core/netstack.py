@@ -164,6 +164,42 @@ class NetworkStack:
         # toward a full burst before forwarding (the Fig. 4 DCA semantics);
         # next_free_ns surfaces them so event loops advance time to them
         self._queue_deadline: Dict[Tuple[int, int], int] = {}
+        self._dca_wait_ns: Optional[int] = None
+
+    # -- DCA accumulate-then-forward (paper Fig. 4(b)) ------------------------
+    def enable_dca_accumulate(self, wait_timeout_ns: int) -> "NetworkStack":
+        """Turn on Fig. 4 accumulate-then-forward: a queue whose written-back
+        backlog is below the servicing burst size is left to accumulate, with
+        a give-up deadline ``wait_timeout_ns`` past the first observation of a
+        partial backlog (surfaced to event loops via :meth:`next_free_ns`).
+        Only meaningful with an attached SimClock — wall-clock mode ignores
+        it, there the host's real pacing is the measurement."""
+        if wait_timeout_ns < 0:
+            raise ValueError("wait_timeout_ns must be >= 0")
+        self._dca_wait_ns = int(wait_timeout_ns)
+        return self
+
+    def _dca_accumulate_wait(self, key: Tuple[int, int], avail: int,
+                             burst: int) -> bool:
+        """Accumulate-gate decision for one nonempty queue: True → leave the
+        backlog to keep growing toward a full burst.  Maintains the per-queue
+        give-up deadline (armed at first sight of a partial backlog, cleared
+        on forward)."""
+        if avail >= burst:
+            self._queue_deadline.pop(key, None)
+            return False
+        now = self._poll_now_ns
+        deadline = self._queue_deadline.get(key)
+        if deadline is None:
+            # first sight of a partial burst: start the give-up timer
+            self._queue_deadline[key] = now + self._dca_wait_ns
+            return True
+        if now < deadline:
+            return True
+        # deadline expired: forward the partial burst (bounds the worst-case
+        # latency of a train that ends mid-burst)
+        self._queue_deadline.pop(key, None)
+        return False
 
     # -- virtual time ---------------------------------------------------------
     def attach_clock(self, clock: SimClock,

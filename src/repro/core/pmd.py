@@ -263,18 +263,6 @@ class BypassL2FwdServer(NetworkStack):
         self.burst_process_fn = burst_process_fn if burst_process_fn is not None else (
             None if process_fn is not None else swap_macs_vec
         )
-        self._dca_wait_ns: Optional[int] = None
-
-    def enable_dca_accumulate(self, wait_timeout_ns: int) -> "BypassL2FwdServer":
-        """Turn on Fig. 4 accumulate-then-forward: each lcore waits for a
-        full burst of written-back descriptors before forwarding, giving up
-        ``wait_timeout_ns`` after first observing a partial backlog.  Only
-        meaningful with an attached SimClock (wall-clock mode ignores it —
-        there the host's real pacing is the measurement)."""
-        if wait_timeout_ns < 0:
-            raise ValueError("wait_timeout_ns must be >= 0")
-        self._dca_wait_ns = int(wait_timeout_ns)
-        return self
 
     def _service_queue(self, lcore: Lcore, port_idx: int, queue_idx: int,
                        qstats: ServerStats) -> int:
@@ -288,20 +276,9 @@ class BypassL2FwdServer(NetworkStack):
                 qstats.empty_polls += 1
                 self._queue_deadline.pop(key, None)
                 return 0
-            if avail < lcore.burst_size:
-                now = self._poll_now_ns
-                deadline = self._queue_deadline.get(key)
-                if deadline is None:
-                    # first sight of a partial burst: start the give-up timer
-                    self._queue_deadline[key] = now + self._dca_wait_ns
-                    qstats.poll_iterations += 1
-                    return 0
-                if now < deadline:
-                    qstats.poll_iterations += 1
-                    return 0
-                # deadline expired: forward the partial burst (bounds the
-                # worst-case latency of a train that ends mid-burst)
-            self._queue_deadline.pop(key, None)
+            if self._dca_accumulate_wait(key, avail, lcore.burst_size):
+                qstats.poll_iterations += 1
+                return 0
         # the DPDK loop iteration, verbatim: rx_burst → process → tx_burst
         slots, lengths = port.rx_burst(queue_idx, lcore.burst_size)
         qstats.poll_iterations += 1
@@ -370,8 +347,24 @@ class PipelineServer(NetworkStack):
         return self._tx_pass(lcore.burst_size)
 
     def _rx_pass(self, burst: int) -> int:
+        # DCA accumulate-then-forward parity with the bypass stack (virtual
+        # time only): a queue whose written-back backlog is below the RX
+        # stage's burst is left to accumulate, bounded by the give-up
+        # deadline, before the stage pushes anything downstream.
+        accumulate = self._dca_wait_ns is not None and self.clock is not None
         for qi, ring in enumerate(self.port.rx_queues):
             qstats = self.queue_stats[(0, qi)]
+            if accumulate:
+                avail = ring.done_count
+                key = (0, qi)
+                if avail == 0:
+                    qstats.poll_iterations += 1
+                    qstats.empty_polls += 1
+                    self._queue_deadline.pop(key, None)
+                    continue
+                if self._dca_accumulate_wait(key, avail, burst):
+                    qstats.poll_iterations += 1
+                    continue
             batch = ring.poll(burst)
             qstats.poll_iterations += 1
             if not batch:

@@ -14,7 +14,7 @@ live objects from a config is :mod:`repro.exp.testbed`'s job; running one is
 from __future__ import annotations
 
 from dataclasses import asdict, dataclass, field, fields, replace
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.cost import HostCostModel
 from repro.core.loadgen import TRAFFIC_KINDS
@@ -169,6 +169,10 @@ class DcaConfig:
     burst_size: int = 32
     writeback_threshold: Optional[int] = 32
     writeback_timeout_ns: int = 200_000
+    # modeled writeback DMA transfer time: descriptors become PMD-visible
+    # this many ns after the threshold crossing starts the writeback
+    # (0 == instantaneous — bit-identical to pre-DMA legacy reports)
+    writeback_dma_ns: int = 0
     per_lcore_bursts: Optional[Tuple[int, ...]] = None
     # per-RX-queue writeback thresholds (index == queue id); entries override
     # ``writeback_threshold`` for their queue, ``None`` entries fall through
@@ -198,6 +202,8 @@ class DcaConfig:
                 "writeback_timeout_ns must be >= 1 (it bounds how long a "
                 "completion can sit PMD-invisible; to make timeouts "
                 "irrelevant use a small writeback_threshold instead)")
+        if self.writeback_dma_ns < 0:
+            raise ValueError("writeback_dma_ns must be >= 0")
         if self.per_lcore_bursts is not None and (
                 len(self.per_lcore_bursts) == 0
                 or any(b < 1 for b in self.per_lcore_bursts)):
@@ -550,6 +556,12 @@ class TopologyConfig:
     from ``traffic.seed + g``, so the scenario stays deterministic while
     clients stay decorrelated.  ``target`` names the node all clients send to
     ("" == the first node) — the N:1 shape of an incast.
+
+    ``serving`` (optional) turns the scenario into an LLM-inference-serving
+    cluster: clients become request populations (QPS, token-length mix) and
+    the named balancer/prefill/decode nodes must carry the matching serving
+    stack kinds.  ``traffic`` then only contributes duration/seed/engine
+    knobs — the offered load comes from ``serving.qps``.
     """
 
     name: str = "topology"
@@ -559,6 +571,9 @@ class TopologyConfig:
     switch: SwitchConfig = field(default_factory=SwitchConfig)
     traffic: TrafficConfig = field(default_factory=TrafficConfig)
     target: str = ""
+    # repro.serving.ServingConfig; typed loosely to keep repro.exp importable
+    # without the serving package (it imports this module back)
+    serving: Optional[Any] = None
 
     def __post_init__(self) -> None:
         if not self.nodes:
@@ -583,6 +598,48 @@ class TopologyConfig:
             raise ValueError("topology traffic mode must be open_loop")
         if not self.traffic.sim_time:
             raise ValueError("topologies run in virtual time (sim_time=True)")
+        if self.serving is not None:
+            self._validate_serving(names)
+
+    def _validate_serving(self, names: List[str]) -> None:
+        from repro.serving.config import ServingConfig
+        s = self.serving
+        if not isinstance(s, ServingConfig):
+            raise ValueError(
+                f"serving must be a ServingConfig, got {type(s).__name__}")
+        by_name = {n.name: n for n in self.nodes}
+        roles = [(s.balancer, "balancer"), *[(p, "prefill") for p in s.prefill],
+                 *[(d, "decode") for d in s.decode]]
+        for node_name, kind in roles:
+            if node_name not in by_name:
+                raise ValueError(
+                    f"serving {kind} node {node_name!r} is not a node name "
+                    f"(have {names})")
+            nc = by_name[node_name]
+            if nc.stack.kind != kind:
+                raise ValueError(
+                    f"serving {kind} node {node_name!r} has stack kind "
+                    f"{nc.stack.kind!r}; it must be {kind!r}")
+            # serving nodes exchange full-size request/KV frames
+            max_frame = max(s.request_frame_bytes, s.kv_segment_bytes,
+                            s.token_frame_bytes)
+            if max_frame > nc.pool.slot_size:
+                raise ValueError(
+                    f"serving frames up to {max_frame}B exceed node "
+                    f"{node_name!r} pool slot size {nc.pool.slot_size}")
+            # engine iterations park a node's lcore for long virtual
+            # windows; frames idling below a >1 writeback threshold would
+            # only surface at quiet-fabric flushes, stalling the pipeline.
+            # Either expose completions immediately (threshold 1) or model
+            # DCA properly (DcaConfig arms the give-up timers).
+            if nc.dca is None and nc.port.writeback_threshold != 1:
+                raise ValueError(
+                    f"serving node {node_name!r} needs "
+                    "port.writeback_threshold == 1 (or an explicit "
+                    "DcaConfig with writeback timers)")
+        if s.request_frame_bytes > self.client_pool.slot_size:
+            raise ValueError(
+                "serving request_frame_bytes exceeds the client pool slot size")
 
     def to_dict(self) -> Dict[str, Any]:
         return _config_to_dict(self)
@@ -594,6 +651,9 @@ class TopologyConfig:
         d["client_pool"] = PoolConfig.from_dict(d.get("client_pool", {}))
         d["switch"] = SwitchConfig.from_dict(d.get("switch", {}))
         d["traffic"] = TrafficConfig.from_dict(d.get("traffic", {}))
+        if d.get("serving") is not None:
+            from repro.serving.config import ServingConfig
+            d["serving"] = ServingConfig.from_dict(d["serving"])
         return cls(**d)
 
     def with_traffic(self, **kw: Any) -> "TopologyConfig":

@@ -84,7 +84,7 @@ def apply_dca(dca: Optional[DcaConfig], devs: Sequence[EthDev],
     if dca is None:
         return
     for dev in devs:
-        dev.attach_dca(sched, dca.writeback_timeout_ns)
+        dev.attach_dca(sched, dca.writeback_timeout_ns, dca.writeback_dma_ns)
     if hasattr(server, "enable_dca_accumulate"):
         server.enable_dca_accumulate(dca.writeback_timeout_ns)
 

@@ -28,7 +28,7 @@ the same ``TopologyConfig`` produces a bit-identical ``RunReport`` every run.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -62,12 +62,18 @@ class Node:
 
 @dataclass
 class Client:
-    """One fabric-attached load generator and its private buffer arena."""
+    """One fabric-attached client population and its private buffer arena.
 
-    lg: LoadGen
+    Echo workloads drive a :class:`~repro.core.loadgen.LoadGen`; serving
+    topologies (``TopologyConfig.serving``) drive a
+    :class:`~repro.serving.requestgen.ServingClient` instead and ``lg`` is
+    None."""
+
+    lg: Optional[LoadGen]
     pool: PacketPool
     port_id: int
     seed: int
+    serving: Optional[object] = None  # repro.serving.ServingClient
 
 
 def _node_sink(node: Node) -> Callable[[np.ndarray, int], None]:
@@ -89,12 +95,36 @@ def _node_sink(node: Node) -> Callable[[np.ndarray, int], None]:
 
 
 def _client_sink(client: Client) -> Callable[[np.ndarray, int], None]:
-    """Switch egress → client: the reply is home; record RTT at arrival."""
+    """Switch egress → client: the reply is home; record RTT (echo) or
+    token-stream SLO state (serving) at arrival."""
+
+    if client.serving is not None:
+        serving = client.serving
+
+        def sink(frame: np.ndarray, t_ns: int) -> None:
+            serving.complete_frame(frame, t_ns)
+
+        return sink
 
     def sink(frame: np.ndarray, t_ns: int) -> None:
         client.lg.complete_frame(frame, t_ns)
 
     return sink
+
+
+def _merge_extras(extras: Dict[str, float], new: Dict[str, float],
+                  source: str) -> None:
+    """Merge a component's extras into a RunReport, refusing key collisions.
+
+    Every merge point used to be a blind ``dict.update``; a collision (two
+    nodes exporting the same counter name, a stack reusing a switch key)
+    silently replaced the earlier value and corrupted the report.  Now it
+    raises, naming the offender."""
+    for k in new:
+        if k in extras:
+            raise ValueError(
+                f"RunReport extras key collision: {source} re-exports {k!r}")
+    extras.update(new)
 
 
 class Cluster:
@@ -112,6 +142,8 @@ class Cluster:
 
     @classmethod
     def build(cls, cfg: TopologyConfig) -> "Cluster":
+        if cfg.serving is not None:
+            import repro.serving  # noqa: F401 — registers the serving kinds
         clock = SimClock()
         sched = EventScheduler(clock)
         switch = Switch(len(cfg.nodes) + cfg.n_clients, sched,
@@ -171,20 +203,33 @@ class Cluster:
             switch.attach(i, _node_sink(node))
             switch.add_route(ip, i, prefix_len=32)
             nodes.append(node)
-        target_name = cfg.target or cfg.nodes[0].name
-        target_ip = next(n.ip for n in nodes if n.cfg.name == target_name)
         t = cfg.traffic
+        if cfg.serving is not None:
+            from repro.serving import ServingClient, wire_serving
+            wire_serving(cfg.serving, {n.cfg.name: n for n in nodes})
+            balancer_ip = next(n.ip for n in nodes
+                               if n.cfg.name == cfg.serving.balancer)
+        else:
+            target_name = cfg.target or cfg.nodes[0].name
+            target_ip = next(n.ip for n in nodes if n.cfg.name == target_name)
         clients: List[Client] = []
         for g in range(cfg.n_clients):
             port_id = len(nodes) + g
             pool = PacketPool(cfg.client_pool.n_slots, cfg.client_pool.slot_size)
             src_base = CLIENT_IP_BASE | ((g + 1) << 16)
-            lg = LoadGen([], ts_offset=t.ts_offset,
-                         verify_integrity=t.verify_integrity,
-                         max_tx_burst=t.max_tx_burst, n_flows=t.n_flows,
-                         src_ip_base=src_base, dst_ip=target_ip)
-            client = Client(lg=lg, pool=pool, port_id=port_id,
-                            seed=t.seed + g)
+            if cfg.serving is not None:
+                sc = ServingClient(serving=cfg.serving, client_index=g,
+                                   src_ip=src_base, balancer_ip=balancer_ip,
+                                   seed=t.seed + g)
+                client = Client(lg=None, pool=pool, port_id=port_id,
+                                seed=t.seed + g, serving=sc)
+            else:
+                lg = LoadGen([], ts_offset=t.ts_offset,
+                             verify_integrity=t.verify_integrity,
+                             max_tx_burst=t.max_tx_burst, n_flows=t.n_flows,
+                             src_ip_base=src_base, dst_ip=target_ip)
+                client = Client(lg=lg, pool=pool, port_id=port_id,
+                                seed=t.seed + g)
             switch.attach(port_id, _client_sink(client))
             switch.add_route(src_base, port_id, prefix_len=16)
             clients.append(client)
@@ -208,6 +253,10 @@ class Cluster:
         # per-client analytic schedules: [times, sizes, cursor, rng]
         scheds: List[list] = []
         for client in self.clients:
+            if client.serving is not None:
+                times = client.serving.plan(dur_ns, start)
+                scheds.append([times, None, 0, None])
+                continue
             pattern = TrafficPattern(
                 rate_gbps=t.rate_gbps, packet_size=t.packet_size, kind=t.kind,
                 burst_len=t.burst_len, seed=client.seed)
@@ -227,11 +276,19 @@ class Cluster:
                 n = len(times)
                 while i < n and times[i] <= now:
                     t_emit = int(times[i])
-                    frame = client.lg.make_frame(
-                        client.pool, int(sizes[i]), t_emit,
-                        rng if t.verify_integrity else None)
-                    if frame is not None:
-                        self.switch.send(client.port_id, frame, t_ns=t_emit)
+                    if client.serving is not None:
+                        # one due request == its whole frame flow; the
+                        # uplink wire's FIFO serialization spaces the frames
+                        for frame in client.serving.emit_request(i, t_emit):
+                            self.switch.send(client.port_id, frame,
+                                             t_ns=t_emit)
+                    else:
+                        frame = client.lg.make_frame(
+                            client.pool, int(sizes[i]), t_emit,
+                            rng if t.verify_integrity else None)
+                        if frame is not None:
+                            self.switch.send(client.port_id, frame,
+                                             t_ns=t_emit)
                     i += 1
                     moved += 1
                 st[2] = i
@@ -289,7 +346,34 @@ class Cluster:
     # -- reporting ------------------------------------------------------------
     def _report(self, start_ns: int) -> RunReport:
         """Merge every client's telemetry into one RunReport, with per-switch-
-        port drop/occupancy counters and per-node NIC counters in extras."""
+        port drop/occupancy counters and per-node NIC counters in extras.
+        Every extras merge goes through :func:`_merge_extras`, so a key
+        collision between components raises instead of silently corrupting
+        the report."""
+        if self.cfg.serving is not None:
+            rep = self._serving_report()
+        else:
+            rep = self._echo_report()
+        rep.extras["sim_time"] = 1.0
+        rep.extras["virtual_elapsed_ns"] = float(self.clock.now_ns - start_ns)
+        for ni, node in enumerate(self.nodes):
+            st = node.dev.stats()
+            rep.extras[f"n{ni}_rx_packets"] = float(st.ipackets)
+            rep.extras[f"n{ni}_imissed"] = float(st.imissed)
+            rep.extras[f"n{ni}_rx_nombuf"] = float(st.rx_nombuf)
+            # per-ring descriptor-writeback telemetry (the Fig. 4 observable)
+            _merge_extras(rep.extras,
+                          writeback_extras([node.dev], prefix=f"n{ni}_"),
+                          f"node {node.cfg.name!r} writeback telemetry")
+            if hasattr(node.server, "extras"):
+                _merge_extras(
+                    rep.extras,
+                    {f"n{ni}_{k}": v for k, v in node.server.extras().items()},
+                    f"node {node.cfg.name!r} stack extras")
+        _merge_extras(rep.extras, self.switch.extras(), "switch telemetry")
+        return rep
+
+    def _echo_report(self) -> RunReport:
         t = self.cfg.traffic
         sent = sum(c.lg.flight.sent for c in self.clients)
         received = sum(c.lg.flight.received for c in self.clients)
@@ -313,19 +397,55 @@ class Cluster:
             latency=lat.stats(),
             histogram=lat.histogram(),
         )
-        rep.extras["sim_time"] = 1.0
-        rep.extras["virtual_elapsed_ns"] = float(self.clock.now_ns - start_ns)
         rep.extras["integrity_errors"] = float(
             sum(c.lg.flight.integrity_errors for c in self.clients))
         for gi, c in enumerate(self.clients):
             rep.extras[f"g{gi}_sent"] = float(c.lg.flight.sent)
             rep.extras[f"g{gi}_received"] = float(c.lg.flight.received)
-        for ni, node in enumerate(self.nodes):
-            st = node.dev.stats()
-            rep.extras[f"n{ni}_rx_packets"] = float(st.ipackets)
-            rep.extras[f"n{ni}_imissed"] = float(st.imissed)
-            rep.extras[f"n{ni}_rx_nombuf"] = float(st.rx_nombuf)
-            # per-ring descriptor-writeback telemetry (the Fig. 4 observable)
-            rep.extras.update(writeback_extras([node.dev], prefix=f"n{ni}_"))
-        rep.extras.update(self.switch.extras())
+        return rep
+
+    def _serving_report(self) -> RunReport:
+        """Serving semantics: sent/received count *requests*, the latency
+        column is request E2E completion time, and the serving SLOs (TTFT /
+        TPOT percentiles, virtual ns) ride in extras."""
+        s = self.cfg.serving
+        scs = [c.serving for c in self.clients]
+        sent = sum(sc.requests_sent for sc in scs)
+        received = sum(sc.requests_completed for sc in scs)
+        e2e, ttft, tpot = LatencyRecorder(), LatencyRecorder(), LatencyRecorder()
+        for sc in scs:
+            for rec, merged in ((sc.e2e, e2e), (sc.ttft, ttft),
+                                (sc.tpot, tpot)):
+                vals = rec.values()
+                if len(vals):
+                    merged.record_many(vals)
+        meter = ThroughputMeter()
+        for sc in scs:
+            m = sc.meter
+            if m.start_ns is not None and m.end_ns is not None:
+                meter.merge_counts(m.packets, m.bytes, m.start_ns, m.end_ns)
+        rep = RunReport(
+            offered_gbps=(s.qps * s.request_frame_bytes * 8 / 1e9
+                          * len(self.clients)),
+            achieved_gbps=meter.gbps,
+            achieved_mpps=meter.mpps,
+            sent=sent,
+            received=received,
+            dropped=sent - received,
+            latency=e2e.stats(),
+            histogram=e2e.histogram(),
+        )
+        x = rep.extras
+        x["serving"] = 1.0
+        x["offered_qps"] = float(s.qps * len(self.clients))
+        for name, rec in (("ttft", ttft), ("tpot", tpot)):
+            st = rec.stats()
+            x[f"{name}_p50_ns"] = float(st.median_ns) if st else 0.0
+            x[f"{name}_p99_ns"] = float(st.p99_ns) if st else 0.0
+            x[f"{name}_mean_ns"] = float(st.mean_ns) if st else 0.0
+            x[f"{name}_count"] = float(rec.count)
+        for gi, sc in enumerate(scs):
+            _merge_extras(x,
+                          {f"g{gi}_{k}": v for k, v in sc.extras().items()},
+                          f"client {gi} serving extras")
         return rep

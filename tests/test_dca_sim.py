@@ -141,15 +141,17 @@ def test_dca_timeout_must_be_positive():
 
 # -- end-to-end: burst size moves measured RTT percentiles (Fig. 4) ------------
 
-def _single_host_cfg(burst: int, threshold=32) -> ExperimentConfig:
+def _single_host_cfg(burst: int, threshold=32, dma_ns=0,
+                     kind="bypass") -> ExperimentConfig:
     return ExperimentConfig(
         name=f"dca-b{burst}",
         ports=(PortConfig(n_queues=1, ring_size=2048),),
-        stack=StackConfig(kind="bypass", n_lcores=1),
+        stack=StackConfig(kind=kind, n_lcores=1),
         traffic=TrafficConfig(mode="open_loop", rate_gbps=10.0,
                               packet_size=1518, duration_s=0.002, seed=3),
         dca=DcaConfig(burst_size=burst, writeback_threshold=threshold,
-                      writeback_timeout_ns=200_000))
+                      writeback_timeout_ns=200_000,
+                      writeback_dma_ns=dma_ns))
 
 
 def test_burst_size_moves_measured_rtt_percentiles():
@@ -211,6 +213,75 @@ def test_dca_msb_mode_timers_fire_without_explicit_sched():
                       writeback_timeout_ns=100_000))
     rep = run_experiment(cfg)
     assert rep.extras["msb_gbps"] > 0
+
+
+# -- satellite: accumulate-then-forward on the pipeline stack ------------------
+
+def test_pipeline_dca_accumulate_moves_rtt_percentiles():
+    """The Fig. 4 accumulation semantics are stack-generic: the pipeline
+    RX stage holds partial bursts behind the same give-up deadline the
+    bypass PMD uses, so sweeping the DCA burst moves measured percentiles
+    through run_experiment with kind='pipeline' too — and the deadline
+    still forwards the end-of-train tail (no losses)."""
+    r32 = run_experiment(_single_host_cfg(32, kind="pipeline"))
+    r1024 = run_experiment(_single_host_cfg(1024, kind="pipeline"))
+    for rep in (r32, r1024):
+        assert rep.received == rep.sent > 1000
+    assert r1024.latency.p99_ns > 2 * r32.latency.p99_ns
+    assert r1024.latency.median_ns > r32.latency.median_ns
+    again = run_experiment(_single_host_cfg(1024, kind="pipeline"))
+    assert again.summary() == r1024.summary()
+
+
+# -- satellite: writeback DMA latency ------------------------------------------
+
+def test_writeback_dma_defers_publication_by_exactly_dma_ns():
+    """With ``writeback_dma_ns`` armed, a threshold crossing *starts* a DMA:
+    descriptors become PMD-visible ``dma_ns`` later as a scheduler event.
+    At 0 (the default) the crossing publishes synchronously — the legacy
+    behaviour, with no scheduler traffic at all."""
+    sched = EventScheduler(SimClock())
+    legacy = RxDescriptorRing(64, writeback_threshold=4)
+    legacy.attach_scheduler(sched, timeout_ns=5_000)  # dma defaults to 0
+    for i in range(4):
+        legacy.nic_deliver(i, 100)
+    assert legacy.done_count == 4 and len(sched) == 0
+
+    ring = RxDescriptorRing(64, writeback_threshold=4)
+    ring.attach_scheduler(sched, timeout_ns=5_000, writeback_dma_ns=700)
+    for i in range(4):
+        ring.nic_deliver(i, 100)
+    assert ring.done_count == 0          # in DMA flight, not yet visible
+    assert sched.next_time_ns() == 700
+    sched.run_until(700)
+    assert ring.done_count == 4
+
+
+def test_writeback_dma_config_round_trips_and_validates():
+    dca = DcaConfig(burst_size=64, writeback_dma_ns=750)
+    assert DcaConfig.from_dict(dca.to_dict()) == dca
+    cfg = ExperimentConfig(name="dma", dca=dca)
+    via_json = ExperimentConfig.from_dict(json.loads(json.dumps(cfg.to_dict())))
+    assert via_json == cfg
+    with pytest.raises(ValueError, match="writeback_dma_ns"):
+        DcaConfig(writeback_dma_ns=-1)
+    with pytest.raises(ValueError, match="writeback_dma_ns"):
+        RxDescriptorRing(64).attach_scheduler(
+            EventScheduler(SimClock()), timeout_ns=1_000, writeback_dma_ns=-5)
+
+
+def test_writeback_dma_latency_shifts_measured_percentiles():
+    """A non-zero DMA latency sits on every completion's critical path, so
+    it shifts the whole measured RTT distribution upward at the same offered
+    rate — and the run still quiesces loss-free and deterministically."""
+    base = run_experiment(_single_host_cfg(32, dma_ns=0))
+    dma = run_experiment(_single_host_cfg(32, dma_ns=20_000))
+    assert dma.received == dma.sent == base.sent
+    assert dma.latency.median_ns > base.latency.median_ns
+    assert dma.latency.p99_ns > base.latency.p99_ns
+    again = run_experiment(_single_host_cfg(32, dma_ns=20_000))
+    assert again.summary() == dma.summary()
+    assert again.latency.as_dict() == dma.latency.as_dict()
 
 
 # -- topology: the same knobs under run_topology_experiment --------------------
