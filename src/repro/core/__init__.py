@@ -5,7 +5,7 @@ from .dataplane import BypassDataplane, FeedStats, KernelStackFeed, make_feed
 from .dca import BurstPlan, OccupancyTrace, run_burst_experiment
 from .descriptor import RxDescriptorRing, TxDescriptorRing, STATUS_DONE, STATUS_FREE
 from .ethdev import EthConf, EthDev, EthDevError, EthDevState, EthStats
-from .fastpath import EpochRunInfo, run_epoch_sim
+from .fastpath import EpochRunInfo, PARTITIONED_REASON, run_epoch_sim
 from .kernel_stack import KernelStackServer, KernelStats
 from .loadgen import LoadGen, TrafficPattern, find_max_sustainable_bandwidth
 from .netstack import Lcore, NetworkStack, ServerStats
@@ -43,6 +43,9 @@ from .packet import (
     write_packets_vec,
     write_seq,
 )
+from .partition import (ClientDomain, Crossing, DomainScheduler, DomainSwitch,
+                        MpPartitionEngine, NodeDomain, PartitionEngine,
+                        PartitionRunInfo, SwitchDomain, assign_groups)
 from .pmd import BypassL2FwdServer, PipelineServer, Port
 from .rings import SpscRing
 from .simclock import EventScheduler, SimClock, Wire
@@ -53,16 +56,21 @@ from .telemetry import (LatencyRecorder, LatencyStats, QueueTelemetry,
                         writeback_extras)
 
 __all__ = [
-    "BypassDataplane", "BypassL2FwdServer", "BurstPlan", "EthConf", "EthDev",
+    "BypassDataplane", "BypassL2FwdServer", "BurstPlan", "ClientDomain",
+    "Crossing", "DomainScheduler", "DomainSwitch", "EthConf", "EthDev",
     "EpochRunInfo",
     "EthDevError", "EthDevState", "EthStats", "EventScheduler", "FeedStats",
     "HostCostModel", "KernelStackFeed", "KernelStackServer", "KernelStats",
-    "LatencyRecorder", "LatencyStats", "Lcore", "LoadGen", "NetworkStack",
-    "OccupancyTrace", "PacketPool", "PacketRef", "PipelineServer", "Port",
+    "LatencyRecorder", "LatencyStats", "Lcore", "LoadGen",
+    "MpPartitionEngine", "NetworkStack", "NodeDomain",
+    "OccupancyTrace", "PARTITIONED_REASON", "PacketPool", "PacketRef",
+    "PartitionEngine", "PartitionRunInfo", "PipelineServer", "Port",
     "QueueTelemetry", "RssIndirection", "RunReport", "RxDescriptorRing",
-    "ServerStats", "SimClock", "SpscRing", "Switch", "SwitchPort",
+    "ServerStats", "SimClock", "SpscRing", "Switch", "SwitchDomain",
+    "SwitchPort",
     "ThroughputMeter", "TrafficPattern",
     "TxDescriptorRing", "Wire", "ZERO_COST",
+    "assign_groups",
     "checksum", "echo_payload_checksum", "find_max_sustainable_bandwidth",
     "flow_bytes",
     "flow_tuple_for_id", "l2fwd_echo", "l2fwd_echo_vec", "make_feed",

@@ -65,8 +65,15 @@ from .pmd import BypassL2FwdServer
 from .simclock import SimClock
 from .telemetry import RunReport
 
-__all__ = ["EpochRunInfo", "run_epoch_sim", "iter_epoch_slices",
-           "default_epoch_ns"]
+__all__ = ["EpochRunInfo", "PARTITIONED_REASON", "run_epoch_sim",
+           "iter_epoch_slices", "default_epoch_ns"]
+
+# fallback-taxonomy reason for topology runs executing under a partition
+# engine (TopologyConfig.partition != "shared-clock"): domains advance on
+# private clocks, so the single-testbed epoch planner does not apply.  The
+# run falls back cleanly to the (partitioned) event loop and surfaces this
+# reason in EpochRunInfo rather than erroring.
+PARTITIONED_REASON = "partitioned domain execution"
 
 # target packets per epoch pass: large enough to amortize numpy/JAX dispatch,
 # small enough that slicing is exercised (and memory stays bounded per pass)

@@ -260,6 +260,28 @@ class RunReport:
     def drop_pct(self) -> float:
         return 100.0 * self.dropped / self.sent if self.sent else 0.0
 
+    def to_dict(self) -> Dict[str, object]:
+        """JSON-safe plain-data form (suite-runner artifacts; round-trips
+        through :meth:`from_dict`)."""
+        return {
+            "offered_gbps": self.offered_gbps,
+            "achieved_gbps": self.achieved_gbps,
+            "achieved_mpps": self.achieved_mpps,
+            "sent": self.sent,
+            "received": self.received,
+            "dropped": self.dropped,
+            "latency": None if self.latency is None else self.latency.as_dict(),
+            "histogram": [dict(b) for b in self.histogram],
+            "extras": dict(self.extras),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "RunReport":
+        d = dict(d)
+        if d.get("latency") is not None:
+            d["latency"] = LatencyStats(**d["latency"])
+        return cls(**d)
+
     def summary(self) -> str:
         lines = [
             f"offered={self.offered_gbps:.3f}Gbps achieved={self.achieved_gbps:.3f}Gbps "

@@ -23,6 +23,11 @@ from repro.core.rss import DEFAULT_TABLE_SIZE
 
 TRAFFIC_MODES = ("open_loop", "closed_loop", "msb")
 TRAFFIC_ENGINES = ("event", "epoch", "epoch-jit")
+# how a topology's event loop executes: one shared SimClock (reference),
+# per-domain clocks synchronized in link-latency epochs (SimBricks,
+# arXiv:2012.14219), or the same partitioning spread across worker processes.
+# All three produce bit-identical RunReports; the knob only trades wall time.
+PARTITION_MODES = ("shared-clock", "partitioned", "partitioned-mp")
 
 
 def _plain(value: Any) -> Any:
@@ -562,6 +567,20 @@ class TopologyConfig:
     the named balancer/prefill/decode nodes must carry the matching serving
     stack kinds.  ``traffic`` then only contributes duration/seed/engine
     knobs — the offered load comes from ``serving.qps``.
+
+    ``partition`` selects the execution engine (:data:`PARTITION_MODES`):
+    ``shared-clock`` is the reference event loop, ``partitioned`` gives every
+    client/node/switch its own clock+scheduler advancing in link-latency
+    epochs, and ``partitioned-mp`` spreads those domains across worker
+    processes (``partition_workers``, 0 == one per CPU).  Reports are
+    bit-identical across all three — execution knobs never touch physics, so
+    they are also excluded from derived-seed fingerprints
+    (:mod:`repro.exp.seeding`).  Configs the partition engine cannot prove
+    equivalent (serving, zero-cost hosts, zero-latency links) fall back to
+    shared-clock with the reason surfaced in ``PartitionRunInfo``.
+
+    ``client_targets`` (optional) gives client ``g`` its own destination node
+    name — an N:M traffic matrix instead of the N:1 ``target`` incast.
     """
 
     name: str = "topology"
@@ -574,6 +593,12 @@ class TopologyConfig:
     # repro.serving.ServingConfig; typed loosely to keep repro.exp importable
     # without the serving package (it imports this module back)
     serving: Optional[Any] = None
+    # execution engine (never affects results — see PARTITION_MODES)
+    partition: str = "shared-clock"
+    partition_workers: int = 0
+    # per-client destination node names (len == n_clients); None == all
+    # clients send to ``target``
+    client_targets: Optional[Tuple[str, ...]] = None
 
     def __post_init__(self) -> None:
         if not self.nodes:
@@ -598,6 +623,26 @@ class TopologyConfig:
             raise ValueError("topology traffic mode must be open_loop")
         if not self.traffic.sim_time:
             raise ValueError("topologies run in virtual time (sim_time=True)")
+        if self.partition not in PARTITION_MODES:
+            raise ValueError(
+                f"partition must be one of {PARTITION_MODES}, "
+                f"got {self.partition!r}")
+        if self.partition_workers < 0:
+            raise ValueError("partition_workers must be >= 0 (0 == auto)")
+        if self.client_targets is not None:
+            if len(self.client_targets) != self.n_clients:
+                raise ValueError(
+                    f"client_targets has {len(self.client_targets)} entries "
+                    f"but n_clients={self.n_clients}")
+            for g, t in enumerate(self.client_targets):
+                if t not in names:
+                    raise ValueError(
+                        f"client_targets[{g}]={t!r} is not a node name "
+                        f"(have {names})")
+            if self.serving is not None:
+                raise ValueError(
+                    "client_targets is an echo-topology knob; serving "
+                    "clients address the balancer")
         if self.serving is not None:
             self._validate_serving(names)
 
@@ -654,6 +699,8 @@ class TopologyConfig:
         if d.get("serving") is not None:
             from repro.serving.config import ServingConfig
             d["serving"] = ServingConfig.from_dict(d["serving"])
+        if d.get("client_targets") is not None:
+            d["client_targets"] = tuple(d["client_targets"])
         return cls(**d)
 
     def with_traffic(self, **kw: Any) -> "TopologyConfig":
@@ -661,3 +708,6 @@ class TopologyConfig:
 
     def with_switch(self, **kw: Any) -> "TopologyConfig":
         return replace(self, switch=replace(self.switch, **kw))
+
+    def with_partition(self, mode: str, workers: int = 0) -> "TopologyConfig":
+        return replace(self, partition=mode, partition_workers=workers)

@@ -16,12 +16,15 @@ from typing import Callable, List, Tuple
 
 import numpy as np
 
-from repro.core import (EthDev, NetworkStack, RunReport, TrafficPattern,
+from typing import Optional
+
+from repro.core import (EpochRunInfo, EthDev, NetworkStack, PARTITIONED_REASON,
+                        PartitionRunInfo, RunReport, TrafficPattern,
                         find_max_sustainable_bandwidth, run_epoch_sim)
 
 from .config import ExperimentConfig, TopologyConfig
 from .testbed import Testbed
-from .topology import Cluster
+from .topology import Cluster, run_partitioned_topology
 
 
 def make_server_factory(
@@ -96,8 +99,30 @@ def run_experiment(cfg: ExperimentConfig) -> RunReport:
     return rep
 
 
-def run_topology_experiment(cfg: TopologyConfig) -> RunReport:
-    """Build + run one multi-host topology (N clients → switch → nodes, one
-    shared SimClock) from config alone; the merged RunReport carries
-    per-switch-port drop/occupancy telemetry in ``extras``."""
-    return Cluster.build(cfg).run()
+def run_topology_experiment(cfg: TopologyConfig, *,
+                            info: Optional[EpochRunInfo] = None,
+                            partition_info: Optional[PartitionRunInfo] = None,
+                            ) -> RunReport:
+    """Build + run one multi-host topology (N clients → switch → nodes) from
+    config alone; the merged RunReport carries per-switch-port
+    drop/occupancy telemetry in ``extras``.
+
+    ``cfg.partition`` selects the execution engine — the shared-clock loop
+    or the epoch-windowed partitioned engines; the report is bit-identical
+    either way (ineligible configs fall back, reason in ``partition_info``).
+    Partitioned execution is an *event-loop* engine: if the traffic config
+    also asked for the epoch fast path (``traffic.engine != "event"``), that
+    request records a :data:`~repro.core.fastpath.PARTITIONED_REASON`
+    fallback in ``info`` — the taxonomy composes instead of silently
+    ignoring one knob."""
+    if cfg.partition == "shared-clock":
+        if partition_info is not None:
+            partition_info.mode_requested = partition_info.mode_used = \
+                "shared-clock"
+            partition_info.n_workers = 1
+        return Cluster.build(cfg).run()
+    if info is not None and cfg.traffic.engine != "event":
+        info.engine = cfg.traffic.engine
+        info.fastpath = False
+        info.fallback_reason = PARTITIONED_REASON
+    return run_partitioned_topology(cfg, info=partition_info)

@@ -1,0 +1,62 @@
+"""Stable RNG-seed derivation from config content (not positional counters).
+
+Every per-client and per-replicate seed used to be a positional offset
+(``traffic.seed + client_index``, submission-order trial counters).  That
+made seeds depend on *where* a config sat in a sweep or in what order trials
+were submitted — exactly what a parallel runner shuffles.  Here seeds derive
+from the sha256 of the config's canonical JSON plus a role salt and an
+index, so:
+
+* the same config produces the same seeds no matter how (or where) it runs;
+* *execution-only* knobs — the config ``name``, the partition mode/worker
+  count, and the traffic ``engine`` — are scrubbed before hashing, because
+  two runs that differ only in how they are executed must stay bit-identical
+  (the partition parity contract and the engine parity contract both lean on
+  this);
+* physics knobs (including ``traffic.seed`` itself) stay in the hash, so
+  distinct experiments stay decorrelated.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from typing import Any, Dict
+
+__all__ = ["EXECUTION_ONLY_KEYS", "scrub_execution_keys",
+           "config_fingerprint", "derive_seed"]
+
+# top-level config keys that select *how* a run executes, never *what* it
+# simulates; they must not perturb any derived seed
+EXECUTION_ONLY_KEYS = ("name", "partition", "partition_workers")
+
+
+def scrub_execution_keys(cfg_dict: Dict[str, Any]) -> Dict[str, Any]:
+    """A copy of a config dict with execution-only knobs removed (top-level
+    ``name``/``partition``/``partition_workers`` and ``traffic.engine``)."""
+    out = {k: v for k, v in cfg_dict.items() if k not in EXECUTION_ONLY_KEYS}
+    traffic = out.get("traffic")
+    if isinstance(traffic, dict):
+        out["traffic"] = {k: v for k, v in traffic.items() if k != "engine"}
+    return out
+
+
+def config_fingerprint(cfg_dict: Dict[str, Any]) -> str:
+    """sha256 hex digest of the scrubbed config's canonical JSON.
+
+    Canonical == sorted keys, minimal separators — byte-stable across dict
+    insertion orders and JSON round-trips.
+    """
+    canon = json.dumps(scrub_execution_keys(cfg_dict), sort_keys=True,
+                       separators=(",", ":"))
+    return hashlib.sha256(canon.encode("utf-8")).hexdigest()
+
+
+def derive_seed(fingerprint: str, index: int, salt: str = "") -> int:
+    """A stable 63-bit seed for role ``salt`` + ``index`` under one config.
+
+    ``np.random.default_rng`` and ``random.Random`` both accept it; distinct
+    (fingerprint, salt, index) triples give independent streams.
+    """
+    h = hashlib.sha256(
+        f"{fingerprint}:{salt}:{int(index)}".encode("utf-8")).digest()
+    return int.from_bytes(h[:8], "big") >> 1

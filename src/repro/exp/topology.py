@@ -1,50 +1,78 @@
 """Multi-host topology builder + driver: N node testbeds and N fabric-attached
-load-generator clients around one :class:`~repro.core.switch.Switch`, all on
-ONE shared :class:`~repro.core.simclock.SimClock`.
+load-generator clients around one :class:`~repro.core.switch.Switch`.
 
 This is the SimBricks-style composition the ROADMAP called for: every node is
 an independently-built model (its own :class:`~repro.core.packet.PacketPool`,
 its own :class:`~repro.core.ethdev.EthDev`, its own server stack from the
 same registry single-host testbeds use), and the pieces meet only on the
 fabric — frames cross between address spaces as byte copies over modeled
-wires, and all timing runs through one
-:class:`~repro.core.simclock.EventScheduler`.
+wires.
 
 The traffic shape is client/server: each client is a
 :class:`~repro.core.loadgen.LoadGen` attached to a switch port through the
 fabric primitives (``make_frame``/``complete_frame``), addressing one target
-node (``TopologyConfig.target``).  The target's stack echoes each frame back
-to its sender (macs + flow IPs swapped), so every client measures true
-four-hop RTTs: uplink → switch egress queue → server NIC/stack → and the
-same in reverse.  With N clients this is the classic **incast**: the switch
-egress port facing the target saturates first, and losses show up in the
-*switch's* per-port drop counters while every NIC stays loss-free —
-exactly the observable the incast benchmark asserts.
+node (``TopologyConfig.target``, or per-client ``client_targets``).  The
+target's stack echoes each frame back to its sender (macs + flow IPs
+swapped), so every client measures true four-hop RTTs: uplink → switch
+egress queue → server NIC/stack → and the same in reverse.  With N clients
+on one target this is the classic **incast**: the switch egress port facing
+the target saturates first, and losses show up in the *switch's* per-port
+drop counters while every NIC stays loss-free — exactly the observable the
+incast benchmark asserts.
 
-Determinism: one clock, FIFO event tie-breaks, per-client seeds derived as
-``traffic.seed + client_index``, and insertion-ordered build/dispatch loops —
-the same ``TopologyConfig`` produces a bit-identical ``RunReport`` every run.
+Two execution engines share this module, selected by ``cfg.partition``:
+
+* ``shared-clock`` — :meth:`Cluster.run`, the reference loop: ONE
+  :class:`~repro.core.simclock.SimClock`, one
+  :class:`~repro.core.simclock.EventScheduler`, one round per virtual
+  instant across every component.
+* ``partitioned`` / ``partitioned-mp`` — :func:`run_partitioned_topology`
+  splits the same config into per-endpoint domains driven by
+  :class:`~repro.core.partition.PartitionEngine` (optionally across worker
+  processes).  :func:`partition_fallback_reason` names the configs the
+  partition engine cannot prove equivalent for; those fall back to the
+  shared loop, recording the reason in a
+  :class:`~repro.core.partition.PartitionRunInfo`.  For everything else the
+  contract is **bit-identical** reports — both engines assemble their
+  :class:`~repro.core.telemetry.RunReport` from the same plain-data *chunks*
+  (:func:`assemble_echo_report`), so they cannot drift apart structurally.
+
+Determinism: one virtual timeline, birth-key/FIFO event tie-breaks,
+per-client seeds derived from the config's content hash
+(:mod:`repro.exp.seeding` — NOT positional counters), and insertion-ordered
+build/dispatch loops — the same ``TopologyConfig`` produces a bit-identical
+``RunReport`` every run, under every engine.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import (EthConf, EthDev, EventScheduler, LatencyRecorder,
                         LoadGen, NetworkStack, PacketPool, RunReport,
                         SimClock, Switch, ThroughputMeter, TrafficPattern,
-                        writeback_extras)
+                        Wire, writeback_extras)
 from repro.core.packet import (l2fwd_echo, l2fwd_echo_vec, swap_macs,
                                swap_macs_vec)
+from repro.core.partition import (ClientDomain, Crossing, DomainScheduler,
+                                  DomainSwitch, MpPartitionEngine, NodeDomain,
+                                  PartitionEngine, PartitionRunInfo,
+                                  SwitchDomain)
 
 from .config import CostConfig, NodeConfig, TopologyConfig
+from .seeding import config_fingerprint, derive_seed
 from .testbed import (apply_dca, build_stack, effective_stack_config,
                       effective_writeback_threshold)
 
 CLIENT_IP_BASE = 0x0A000000   # client g owns 10.(g+1).0.0/16 on the fabric
 NODE_AUTO_IP_BASE = 0xC0A80001  # auto-assigned node i: 192.168.0.(i+1)
+
+# exp-layer builder the mp partition workers import to reconstruct their
+# domain subset from a config dict (repro.core stays exp-agnostic)
+PARTITION_BUILDER = ("repro.exp.topology", "build_partition_domains_subset")
 
 
 @dataclass
@@ -127,6 +155,93 @@ def _merge_extras(extras: Dict[str, float], new: Dict[str, float],
     extras.update(new)
 
 
+# -- shared build helpers (Cluster + partition domains) -----------------------
+
+def _resolve_node_ips(cfg: TopologyConfig) -> List[int]:
+    """Node fabric addresses, resolved up front so collisions fail loudly
+    instead of silently shadowing a route (stable LPM sort keeps
+    first-added)."""
+    ips = [nc.ip if nc.ip else NODE_AUTO_IP_BASE + i
+           for i, nc in enumerate(cfg.nodes)]
+    if len(set(ips)) != len(ips):
+        raise ValueError(
+            f"resolved node ips collide: {[hex(ip) for ip in ips]}; "
+            "auto-assignment uses 192.168.0.(index+1) — pick explicit "
+            "ips outside that range")
+    for ip in ips:
+        if any(ip & 0xFFFF0000 == CLIENT_IP_BASE | ((g + 1) << 16)
+               for g in range(cfg.n_clients)):
+            raise ValueError(
+                f"node ip {hex(ip)} falls inside a client /16 "
+                f"(10.1.0.0 .. 10.{cfg.n_clients}.255.255); replies to "
+                "that client would be shadowed")
+    return ips
+
+
+def _client_target_ip(cfg: TopologyConfig, g: int, ips: List[int]) -> int:
+    """Client ``g``'s destination node address (``client_targets`` entry, or
+    the topology-wide ``target``, or the first node)."""
+    if cfg.client_targets is not None:
+        name = cfg.client_targets[g]
+    else:
+        name = cfg.target or cfg.nodes[0].name
+    for i, nc in enumerate(cfg.nodes):
+        if nc.name == name:
+            return ips[i]
+    raise ValueError(f"target {name!r} names no node")  # config validates this
+
+
+def _build_node_parts(nc: NodeConfig, i: int, clock: SimClock,
+                      sched) -> Tuple[PacketPool, EthDev, NetworkStack]:
+    """One node's private arena, NIC, and server stack — identical wiring for
+    the shared-clock Cluster and a partitioned NodeDomain (``sched`` is an
+    EventScheduler or a DomainScheduler; same API)."""
+    pool = PacketPool(nc.pool.n_slots, nc.pool.slot_size)
+    # the node NIC's own link is ideal: the switch port's wires carry
+    # all link timing for this host
+    dev = EthDev(pool, dev_id=i).configure(EthConf(
+        n_rx_queues=nc.port.n_queues, n_tx_queues=nc.port.n_queues,
+        rss_key=nc.port.rss.key,
+        rss_table_size=nc.port.rss.table_size))
+    for q in range(nc.port.n_queues):
+        dev.rx_queue_setup(
+            q, nc.port.ring_size,
+            writeback_threshold=effective_writeback_threshold(
+                nc.dca, nc.port.writeback_threshold, q))
+        dev.tx_queue_setup(q, nc.port.ring_size)
+    dev.dev_start()
+    server = build_stack(effective_stack_config(nc.stack, nc.dca), [dev])
+    if hasattr(server, "attach_clock"):
+        cost = nc.stack.cost if nc.stack.cost is not None else CostConfig()
+        server.attach_clock(clock, cost.to_host_cost_model())
+    # the node's writeback timers ride the domain/cluster scheduler, so they
+    # interleave deterministically with fabric events; same wiring as a
+    # single-host testbed by construction
+    apply_dca(nc.dca, [dev], server, sched)
+    # a switched fabric needs replies re-addressed to their sender: upgrade
+    # the stock L2Fwd transform to the echo variant (custom process fns
+    # registered by scenario stacks are left alone)
+    if getattr(server, "burst_process_fn", None) is swap_macs_vec:
+        server.burst_process_fn = l2fwd_echo_vec
+    if getattr(server, "process_fn", None) is swap_macs:
+        server.process_fn = l2fwd_echo
+    return pool, dev, server
+
+
+def _echo_schedule(t, seed: int, dur_ns: int, start: int):
+    """One client's analytic emission plan: (times, sizes, rng) — THE
+    function both engines call, so a schedule can never diverge between
+    them."""
+    pattern = TrafficPattern(
+        rate_gbps=t.rate_gbps, packet_size=t.packet_size, kind=t.kind,
+        burst_len=t.burst_len, seed=seed)
+    rng = np.random.default_rng(seed)
+    times, sizes = pattern.emission_schedule(dur_ns, rng)
+    if len(times):
+        times = times + start
+    return times, sizes, rng
+
+
 class Cluster:
     """Live multi-host scenario built from one :class:`TopologyConfig`."""
 
@@ -150,86 +265,44 @@ class Cluster:
                         gbps=cfg.switch.link.gbps,
                         latency_ns=cfg.switch.link.latency_ns,
                         egress_capacity=cfg.switch.egress_capacity)
-        # resolve node addresses up front so collisions fail loudly instead
-        # of silently shadowing a route (stable LPM sort keeps first-added)
-        ips = [nc.ip if nc.ip else NODE_AUTO_IP_BASE + i
-               for i, nc in enumerate(cfg.nodes)]
-        if len(set(ips)) != len(ips):
-            raise ValueError(
-                f"resolved node ips collide: {[hex(ip) for ip in ips]}; "
-                "auto-assignment uses 192.168.0.(index+1) — pick explicit "
-                "ips outside that range")
-        for ip in ips:
-            if any(ip & 0xFFFF0000 == CLIENT_IP_BASE | ((g + 1) << 16)
-                   for g in range(cfg.n_clients)):
-                raise ValueError(
-                    f"node ip {hex(ip)} falls inside a client /16 "
-                    f"(10.1.0.0 .. 10.{cfg.n_clients}.255.255); replies to "
-                    "that client would be shadowed")
+        ips = _resolve_node_ips(cfg)
         nodes: List[Node] = []
         for i, nc in enumerate(cfg.nodes):
-            ip = ips[i]
-            pool = PacketPool(nc.pool.n_slots, nc.pool.slot_size)
-            # the node NIC's own link is ideal: the switch port's wires carry
-            # all link timing for this host
-            dev = EthDev(pool, dev_id=i).configure(EthConf(
-                n_rx_queues=nc.port.n_queues, n_tx_queues=nc.port.n_queues,
-                rss_key=nc.port.rss.key,
-                rss_table_size=nc.port.rss.table_size))
-            for q in range(nc.port.n_queues):
-                dev.rx_queue_setup(
-                    q, nc.port.ring_size,
-                    writeback_threshold=effective_writeback_threshold(
-                        nc.dca, nc.port.writeback_threshold, q))
-                dev.tx_queue_setup(q, nc.port.ring_size)
-            dev.dev_start()
-            server = build_stack(effective_stack_config(nc.stack, nc.dca), [dev])
-            if hasattr(server, "attach_clock"):
-                cost = nc.stack.cost if nc.stack.cost is not None else CostConfig()
-                server.attach_clock(clock, cost.to_host_cost_model())
-            # the node's writeback timers ride the cluster's shared
-            # scheduler, so they interleave deterministically with fabric
-            # events; same wiring as a single-host testbed by construction
-            apply_dca(nc.dca, [dev], server, sched)
-            # a switched fabric needs replies re-addressed to their sender:
-            # upgrade the stock L2Fwd transform to the echo variant (custom
-            # process fns registered by scenario stacks are left alone)
-            if getattr(server, "burst_process_fn", None) is swap_macs_vec:
-                server.burst_process_fn = l2fwd_echo_vec
-            if getattr(server, "process_fn", None) is swap_macs:
-                server.process_fn = l2fwd_echo
-            node = Node(cfg=nc, ip=ip, pool=pool, dev=dev, server=server,
+            pool, dev, server = _build_node_parts(nc, i, clock, sched)
+            node = Node(cfg=nc, ip=ips[i], pool=pool, dev=dev, server=server,
                         port_id=i)
             switch.attach(i, _node_sink(node))
-            switch.add_route(ip, i, prefix_len=32)
+            switch.add_route(ips[i], i, prefix_len=32)
             nodes.append(node)
         t = cfg.traffic
+        # per-client seeds derive from the config's content hash, not the
+        # client's position in some loop — a sweep runner can shuffle,
+        # shard, or replay this config and always get the same streams
+        fp = config_fingerprint(cfg.to_dict())
         if cfg.serving is not None:
             from repro.serving import ServingClient, wire_serving
             wire_serving(cfg.serving, {n.cfg.name: n for n in nodes})
             balancer_ip = next(n.ip for n in nodes
                                if n.cfg.name == cfg.serving.balancer)
-        else:
-            target_name = cfg.target or cfg.nodes[0].name
-            target_ip = next(n.ip for n in nodes if n.cfg.name == target_name)
         clients: List[Client] = []
         for g in range(cfg.n_clients):
             port_id = len(nodes) + g
             pool = PacketPool(cfg.client_pool.n_slots, cfg.client_pool.slot_size)
             src_base = CLIENT_IP_BASE | ((g + 1) << 16)
+            seed = derive_seed(fp, g, "client")
             if cfg.serving is not None:
                 sc = ServingClient(serving=cfg.serving, client_index=g,
                                    src_ip=src_base, balancer_ip=balancer_ip,
-                                   seed=t.seed + g)
+                                   seed=seed)
                 client = Client(lg=None, pool=pool, port_id=port_id,
-                                seed=t.seed + g, serving=sc)
+                                seed=seed, serving=sc)
             else:
                 lg = LoadGen([], ts_offset=t.ts_offset,
                              verify_integrity=t.verify_integrity,
                              max_tx_burst=t.max_tx_burst, n_flows=t.n_flows,
-                             src_ip_base=src_base, dst_ip=target_ip)
-                client = Client(lg=lg, pool=pool, port_id=port_id,
-                                seed=t.seed + g)
+                             src_ip_base=src_base,
+                             dst_ip=_client_target_ip(cfg, g, ips))
+                client = Client(lg=lg, pool=pool, port_id=port_id, seed=seed)
             switch.attach(port_id, _client_sink(client))
             switch.add_route(src_base, port_id, prefix_len=16)
             clients.append(client)
@@ -257,13 +330,8 @@ class Cluster:
                 times = client.serving.plan(dur_ns, start)
                 scheds.append([times, None, 0, None])
                 continue
-            pattern = TrafficPattern(
-                rate_gbps=t.rate_gbps, packet_size=t.packet_size, kind=t.kind,
-                burst_len=t.burst_len, seed=client.seed)
-            rng = np.random.default_rng(client.seed)
-            times, sizes = pattern.emission_schedule(dur_ns, rng)
+            times, sizes, rng = _echo_schedule(t, client.seed, dur_ns, start)
             if len(times):
-                times = times + start
                 client.lg.meter.open_window(int(times[0]))
             scheds.append([times, sizes, 0, rng])
         flushed_idle = False
@@ -347,62 +415,20 @@ class Cluster:
     def _report(self, start_ns: int) -> RunReport:
         """Merge every client's telemetry into one RunReport, with per-switch-
         port drop/occupancy counters and per-node NIC counters in extras.
-        Every extras merge goes through :func:`_merge_extras`, so a key
-        collision between components raises instead of silently corrupting
-        the report."""
+
+        The echo path goes through the same plain-data *chunks* the
+        partition engines report through (:func:`assemble_echo_report`), so
+        the two execution modes share one assembly and cannot drift."""
+        elapsed = float(self.clock.now_ns - start_ns)
+        node_chunks = [_node_chunk(n.dev, n.server) for n in self.nodes]
         if self.cfg.serving is not None:
             rep = self._serving_report()
-        else:
-            rep = self._echo_report()
-        rep.extras["sim_time"] = 1.0
-        rep.extras["virtual_elapsed_ns"] = float(self.clock.now_ns - start_ns)
-        for ni, node in enumerate(self.nodes):
-            st = node.dev.stats()
-            rep.extras[f"n{ni}_rx_packets"] = float(st.ipackets)
-            rep.extras[f"n{ni}_imissed"] = float(st.imissed)
-            rep.extras[f"n{ni}_rx_nombuf"] = float(st.rx_nombuf)
-            # per-ring descriptor-writeback telemetry (the Fig. 4 observable)
-            _merge_extras(rep.extras,
-                          writeback_extras([node.dev], prefix=f"n{ni}_"),
-                          f"node {node.cfg.name!r} writeback telemetry")
-            if hasattr(node.server, "extras"):
-                _merge_extras(
-                    rep.extras,
-                    {f"n{ni}_{k}": v for k, v in node.server.extras().items()},
-                    f"node {node.cfg.name!r} stack extras")
-        _merge_extras(rep.extras, self.switch.extras(), "switch telemetry")
-        return rep
-
-    def _echo_report(self) -> RunReport:
-        t = self.cfg.traffic
-        sent = sum(c.lg.flight.sent for c in self.clients)
-        received = sum(c.lg.flight.received for c in self.clients)
-        lat = LatencyRecorder()
-        for c in self.clients:
-            vals = c.lg.latency.values()
-            if len(vals):
-                lat.record_many(vals)
-        meter = ThroughputMeter()
-        for c in self.clients:
-            m = c.lg.meter
-            if m.start_ns is not None and m.end_ns is not None:
-                meter.merge_counts(m.packets, m.bytes, m.start_ns, m.end_ns)
-        rep = RunReport(
-            offered_gbps=t.rate_gbps * len(self.clients),
-            achieved_gbps=meter.gbps,
-            achieved_mpps=meter.mpps,
-            sent=sent,
-            received=received,
-            dropped=sent - received,
-            latency=lat.stats(),
-            histogram=lat.histogram(),
-        )
-        rep.extras["integrity_errors"] = float(
-            sum(c.lg.flight.integrity_errors for c in self.clients))
-        for gi, c in enumerate(self.clients):
-            rep.extras[f"g{gi}_sent"] = float(c.lg.flight.sent)
-            rep.extras[f"g{gi}_received"] = float(c.lg.flight.received)
-        return rep
+            _append_infra_extras(rep, self.cfg, node_chunks,
+                                 self.switch.extras(), elapsed)
+            return rep
+        return assemble_echo_report(
+            self.cfg, [_client_chunk(c.lg) for c in self.clients],
+            node_chunks, self.switch.extras(), elapsed)
 
     def _serving_report(self) -> RunReport:
         """Serving semantics: sent/received count *requests*, the latency
@@ -449,3 +475,264 @@ class Cluster:
                           {f"g{gi}_{k}": v for k, v in sc.extras().items()},
                           f"client {gi} serving extras")
         return rep
+
+
+# -- chunk-based report assembly (shared-clock AND partitioned) ---------------
+
+def _client_chunk(lg: LoadGen) -> Dict[str, object]:
+    """One echo client's contribution to the report, as plain picklable data
+    (mirrors :meth:`repro.core.partition.ClientDomain.chunk`)."""
+    m = lg.meter
+    return {"sent": lg.flight.sent,
+            "received": lg.flight.received,
+            "integrity_errors": lg.flight.integrity_errors,
+            "latency": lg.latency.values().copy(),
+            "meter": (m.packets, m.bytes, m.start_ns, m.end_ns)}
+
+
+def _node_chunk(dev: EthDev, server: NetworkStack) -> Dict[str, object]:
+    """One node's NIC/stack counters as plain data (mirrors
+    :meth:`repro.core.partition.NodeDomain.chunk`)."""
+    st = dev.stats()
+    out: Dict[str, object] = {
+        "ipackets": st.ipackets, "imissed": st.imissed,
+        "rx_nombuf": st.rx_nombuf,
+        "writeback": writeback_extras([dev]),
+    }
+    if hasattr(server, "extras"):
+        out["stack"] = dict(server.extras())
+    return out
+
+
+def _append_infra_extras(rep: RunReport, cfg: TopologyConfig,
+                         node_chunks: Sequence[Dict[str, object]],
+                         switch_extras: Dict[str, float],
+                         virtual_elapsed_ns: float) -> None:
+    """The report tail every topology run shares: sim provenance, per-node
+    NIC counters + descriptor-writeback telemetry, switch port counters.
+    Merge order is load-bearing (extras is insertion-ordered) — this one
+    function defines it for both execution engines."""
+    rep.extras["sim_time"] = 1.0
+    rep.extras["virtual_elapsed_ns"] = virtual_elapsed_ns
+    for ni, chunk in enumerate(node_chunks):
+        name = cfg.nodes[ni].name
+        rep.extras[f"n{ni}_rx_packets"] = float(chunk["ipackets"])
+        rep.extras[f"n{ni}_imissed"] = float(chunk["imissed"])
+        rep.extras[f"n{ni}_rx_nombuf"] = float(chunk["rx_nombuf"])
+        # per-ring descriptor-writeback telemetry (the Fig. 4 observable)
+        _merge_extras(rep.extras,
+                      {f"n{ni}_{k}": v for k, v in chunk["writeback"].items()},
+                      f"node {name!r} writeback telemetry")
+        if "stack" in chunk:
+            _merge_extras(
+                rep.extras,
+                {f"n{ni}_{k}": v for k, v in chunk["stack"].items()},
+                f"node {name!r} stack extras")
+    _merge_extras(rep.extras, switch_extras, "switch telemetry")
+
+
+def assemble_echo_report(cfg: TopologyConfig,
+                         client_chunks: Sequence[Dict[str, object]],
+                         node_chunks: Sequence[Dict[str, object]],
+                         switch_extras: Dict[str, float],
+                         virtual_elapsed_ns: float) -> RunReport:
+    """One echo RunReport from per-component chunks.  Every aggregation is
+    order-fixed (client index, node index), so any engine that produces
+    identical chunks produces a bit-identical report."""
+    t = cfg.traffic
+    sent = sum(c["sent"] for c in client_chunks)
+    received = sum(c["received"] for c in client_chunks)
+    lat = LatencyRecorder()
+    for c in client_chunks:
+        vals = c["latency"]
+        if len(vals):
+            lat.record_many(vals)
+    meter = ThroughputMeter()
+    for c in client_chunks:
+        packets, nbytes, start_ns, end_ns = c["meter"]
+        if start_ns is not None and end_ns is not None:
+            meter.merge_counts(packets, nbytes, start_ns, end_ns)
+    rep = RunReport(
+        offered_gbps=t.rate_gbps * len(client_chunks),
+        achieved_gbps=meter.gbps,
+        achieved_mpps=meter.mpps,
+        sent=sent,
+        received=received,
+        dropped=sent - received,
+        latency=lat.stats(),
+        histogram=lat.histogram(),
+    )
+    rep.extras["integrity_errors"] = float(
+        sum(c["integrity_errors"] for c in client_chunks))
+    for gi, c in enumerate(client_chunks):
+        rep.extras[f"g{gi}_sent"] = float(c["sent"])
+        rep.extras[f"g{gi}_received"] = float(c["received"])
+    _append_infra_extras(rep, cfg, node_chunks, switch_extras,
+                         virtual_elapsed_ns)
+    return rep
+
+
+# -- partitioned execution ----------------------------------------------------
+
+def partition_fallback_reason(cfg: TopologyConfig) -> Optional[str]:
+    """Why this config must run on the shared clock — or None if partitioned
+    execution is provably bit-identical.
+
+    The conservative-window argument needs (a) ≥ 1 ns of link latency (the
+    lookahead window), and (b) every endpoint to expose its next activity as
+    a candidate time.  A node whose host-cost model rounds to zero ns
+    processes frames only when *polled*, and the shared loop polls every
+    node at every global event time while a domain only rounds at its own —
+    so zero-cost stacks (and stack kinds we haven't proven self-scheduling,
+    e.g. the pipeline stack's zero-charge passes) stay on the shared clock.
+    Serving topologies share live balancer state across nodes and are out of
+    scope entirely."""
+    if cfg.serving is not None:
+        return "serving topology: balancer reads live cross-domain state"
+    if cfg.switch.link.latency_ns < 1:
+        return "zero-latency links leave no conservative lookahead window"
+    for nc in cfg.nodes:
+        kind = effective_stack_config(nc.stack, nc.dca).kind
+        m = (nc.stack.cost if nc.stack.cost is not None
+             else CostConfig()).to_host_cost_model()
+        if kind == "bypass":
+            if int(round(m.pmd_burst_ns(1))) < 1:
+                return (f"node {nc.name!r}: zero-cost PMD model needs the "
+                        "shared loop's every-round polling")
+        elif kind == "kernel":
+            if (int(round(m.ns(m.interrupt_cycles))) < 1
+                    or int(round(m.ns(m.syscall_cycles
+                                      + m.per_packet_kernel_cycles))) < 1):
+                return (f"node {nc.name!r}: zero-cost kernel model needs the "
+                        "shared loop's every-round polling")
+        else:
+            return (f"node {nc.name!r}: stack kind {kind!r} not proven "
+                    "partition-equivalent")
+    return None
+
+
+def _build_domain(cfg: TopologyConfig, idx: int, outbox: List[Crossing]):
+    """Domain ``idx`` of a partitioned topology, built standalone.
+
+    Layout: clients 0..G-1, nodes G..G+N-1, the switch at G+N.  Every domain
+    derives all shared facts (addresses, seeds, schedules) from ``cfg``
+    alone, so workers can build disjoint subsets with no cross-talk."""
+    G, N = cfg.n_clients, len(cfg.nodes)
+    switch_domain = G + N
+    link = cfg.switch.link
+    ips = _resolve_node_ips(cfg)
+    clock = SimClock()
+    ds = DomainScheduler(clock)
+    t = cfg.traffic
+    if idx < G:  # client domain
+        g = idx
+        fp = config_fingerprint(cfg.to_dict())
+        seed = derive_seed(fp, g, "client")
+        pool = PacketPool(cfg.client_pool.n_slots, cfg.client_pool.slot_size)
+        src_base = CLIENT_IP_BASE | ((g + 1) << 16)
+        lg = LoadGen([], ts_offset=t.ts_offset,
+                     verify_integrity=t.verify_integrity,
+                     max_tx_burst=t.max_tx_burst, n_flows=t.n_flows,
+                     src_ip_base=src_base,
+                     dst_ip=_client_target_ip(cfg, g, ips))
+        times, sizes, rng = _echo_schedule(
+            t, seed, int(t.duration_s * 1e9), start=0)
+        if len(times):
+            lg.meter.open_window(int(times[0]))
+        return ClientDomain(
+            index=g, ds=ds, lg=lg, pool=pool, port_id=N + g,
+            uplink=Wire(gbps=link.gbps, latency_ns=link.latency_ns),
+            times=times, sizes=sizes, rng=rng,
+            verify_integrity=t.verify_integrity,
+            switch_domain=switch_domain, outbox=outbox)
+    if idx < G + N:  # node domain
+        ni = idx - G
+        pool, dev, server = _build_node_parts(cfg.nodes[ni], ni, clock, ds)
+        return NodeDomain(
+            index=ni, ds=ds, dev=dev, pool=pool, server=server, port_id=ni,
+            uplink=Wire(gbps=link.gbps, latency_ns=link.latency_ns),
+            max_tx_burst=t.max_tx_burst, switch_domain=switch_domain,
+            outbox=outbox)
+    # switch domain: owns routes, egress wires/queues, and all drop counters
+    domain_of_port = [G + i for i in range(N)] + list(range(G))
+    sw = DomainSwitch(N + G, ds, gbps=link.gbps, latency_ns=link.latency_ns,
+                      egress_capacity=cfg.switch.egress_capacity,
+                      domain_of_port=domain_of_port, outbox=outbox)
+    for i in range(N):
+        sw.add_route(ips[i], i, prefix_len=32)
+    for g in range(G):
+        sw.add_route(CLIENT_IP_BASE | ((g + 1) << 16), N + g, prefix_len=16)
+    return SwitchDomain(index=switch_domain, ds=ds, switch=sw)
+
+
+def build_partition_domains_subset(cfg_dict: dict, ids: Sequence[int],
+                                   outbox: List[Crossing]) -> Dict[int, object]:
+    """mp-worker entry point (imported by name via
+    :data:`PARTITION_BUILDER`): rebuild domains ``ids`` from a config
+    dict."""
+    cfg = TopologyConfig.from_dict(cfg_dict)
+    return {i: _build_domain(cfg, i, outbox) for i in ids}
+
+
+def _report_from_chunks(cfg: TopologyConfig, chunks: Dict[int, Dict[str, object]],
+                        final_clock_ns: int) -> RunReport:
+    G, N = cfg.n_clients, len(cfg.nodes)
+    return assemble_echo_report(
+        cfg,
+        [chunks[g] for g in range(G)],
+        [chunks[G + ni] for ni in range(N)],
+        chunks[G + N]["extras"],
+        float(final_clock_ns))
+
+
+def run_partitioned_topology(cfg: TopologyConfig, *,
+                             info: Optional[PartitionRunInfo] = None,
+                             n_groups: int = 1,
+                             trace: Optional[List[Crossing]] = None
+                             ) -> RunReport:
+    """Run one topology config under its requested partition mode.
+
+    Configs the engine cannot prove equivalent for (see
+    :func:`partition_fallback_reason`) fall back to the shared-clock loop;
+    ``info`` (if given) records what actually ran.  ``n_groups`` only
+    regroups in-process domain execution (results are identical by
+    construction); ``trace``, if a list, collects every boundary
+    :data:`~repro.core.partition.Crossing` for property tests."""
+    if info is None:
+        info = PartitionRunInfo()
+    info.mode_requested = cfg.partition
+    reason = partition_fallback_reason(cfg) if cfg.partition != "shared-clock" \
+        else None
+    if cfg.partition == "shared-clock" or reason is not None:
+        info.mode_used = "shared-clock"
+        info.fallback_reason = reason
+        info.n_workers = 1
+        return Cluster.build(cfg).run()
+    G, N = cfg.n_clients, len(cfg.nodes)
+    n_domains = G + N + 1
+    delta = cfg.switch.link.latency_ns
+    info.n_domains = n_domains
+    workers = cfg.partition_workers
+    if cfg.partition == "partitioned-mp" and workers == 0:
+        workers = max(2, os.cpu_count() or 1)
+    if cfg.partition == "partitioned-mp" and workers > 1:
+        eng = MpPartitionEngine(cfg.to_dict(), PARTITION_BUILDER, n_domains,
+                                delta, workers)
+        try:
+            chunks = eng.run()
+        finally:
+            eng.close()
+        info.mode_used = "partitioned-mp"
+        info.n_windows = eng.n_windows
+        info.n_workers = eng.n_workers
+        return _report_from_chunks(cfg, chunks, eng.final_clock_ns)
+    # in-process: mode "partitioned", or "partitioned-mp" pinned to 1 worker
+    outbox: List[Crossing] = []
+    domains = [_build_domain(cfg, i, outbox) for i in range(n_domains)]
+    eng = PartitionEngine(domains, delta, outbox, n_groups=n_groups,
+                          trace=trace)
+    eng.run()
+    info.mode_used = "partitioned"
+    info.n_windows = eng.n_windows
+    info.n_workers = 1
+    return _report_from_chunks(cfg, eng.chunks(), eng.final_clock_ns)

@@ -256,3 +256,36 @@ def test_clean_bypass_config_has_no_reason():
     assert _fallback_reason(LoadGen(ports), srv, None) is None
     assert _fallback_reason(LoadGen(ports), srv,
                             EventScheduler(srv.clock)) is None
+
+
+# -- topology-level reason: partitioned execution ------------------------------
+#
+# PR 8 adds one reason the per-host predicate can never see: a topology run
+# under a partition mode executes domain-by-domain, and the epoch fast path
+# only exists inside the shared event loop.  ``run_topology_experiment`` is
+# the layer that knows, so it stamps the info struct itself.
+
+def test_partitioned_reason_is_distinct_and_stamped():
+    from repro.core.fastpath import PARTITIONED_REASON
+    from repro.exp import (LinkConfig, NodeConfig, StackConfig, SwitchConfig,
+                           TopologyConfig, TrafficConfig,
+                           run_topology_experiment)
+
+    assert PARTITIONED_REASON not in [c[2] for c in CONFIG_CASES]
+    cfg = TopologyConfig(
+        name="taxonomy-partitioned",
+        nodes=(NodeConfig(name="srv",
+                          stack=StackConfig(kind="bypass", burst_size=32)),),
+        n_clients=2,
+        switch=SwitchConfig(link=LinkConfig(gbps=40.0, latency_ns=1000)),
+        traffic=TrafficConfig(mode="open_loop", rate_gbps=2.0,
+                              duration_s=0.0002, packet_size=512, seed=7,
+                              sim_time=True, engine="epoch"),
+    ).with_partition("partitioned")
+    info = EpochRunInfo()
+    rep = run_topology_experiment(cfg, info=info)
+    assert not info.fastpath
+    assert info.fallback_reason == PARTITIONED_REASON
+    # refusal, not mis-simulation: bit-identical to the shared-clock run
+    shared = run_topology_experiment(cfg.with_partition("shared-clock"))
+    assert rep.to_dict() == shared.to_dict()

@@ -1,0 +1,289 @@
+"""Partitioned-parallel topology execution (PR 8 tentpole).
+
+The contract under test is HARD: for every partition-eligible topology
+config, the partitioned engines (in-process domains and worker processes)
+must produce a RunReport **bit-identical** to the shared-clock loop — same
+counters, same latency percentiles, same extras, same histogram buckets.
+Configs outside the proven-equivalent set must *refuse* (fall back to the
+shared loop with a named reason), never approximate.
+"""
+import pytest
+
+from repro.core import (PartitionRunInfo, Wire, assign_groups)
+from repro.core.partition import DomainScheduler, _deliver_due
+from repro.core.simclock import SimClock
+from repro.exp import (CostConfig, DcaConfig, LinkConfig, NodeConfig,
+                       PoolConfig, PortConfig, StackConfig, SwitchConfig,
+                       TopologyConfig, TrafficConfig,
+                       partition_fallback_reason, run_partitioned_topology,
+                       run_topology_experiment)
+from repro.exp.topology import Cluster
+
+
+def _node(name="srv", kind="bypass", dca=None, n_queues=1, cost=None):
+    return NodeConfig(name=name,
+                      pool=PoolConfig(n_slots=8192, slot_size=2048),
+                      port=PortConfig(n_queues=n_queues, ring_size=512,
+                                      writeback_threshold=1),
+                      stack=StackConfig(kind=kind, burst_size=32, cost=cost),
+                      dca=dca)
+
+
+def _topology(nodes=None, n_clients=2, rate_gbps=2.0, duration_s=0.0002,
+              packet_size=256, kind="poisson", burst_len=1,
+              egress_capacity=64, link_gbps=100.0, latency_ns=1000,
+              client_targets=None, name="part"):
+    return TopologyConfig(
+        name=name,
+        nodes=tuple(nodes) if nodes else (_node(),),
+        n_clients=n_clients,
+        client_targets=client_targets,
+        switch=SwitchConfig(egress_capacity=egress_capacity,
+                            link=LinkConfig(gbps=link_gbps,
+                                            latency_ns=latency_ns)),
+        traffic=TrafficConfig(mode="open_loop", rate_gbps=rate_gbps,
+                              duration_s=duration_s, packet_size=packet_size,
+                              kind=kind, burst_len=burst_len, seed=7,
+                              sim_time=True))
+
+
+# every topology shape the repo's test suite exercises, as a parity corpus
+PARITY_CASES = {
+    "bypass-2c": _topology(),
+    "kernel": _topology(nodes=[_node(kind="kernel")], rate_gbps=1.0),
+    "incast-drops": _topology(n_clients=6, rate_gbps=6.0, packet_size=512,
+                              egress_capacity=8, link_gbps=10.0),
+    "bursty-rss": _topology(nodes=[_node(n_queues=2)], kind="bursty",
+                            burst_len=4, rate_gbps=3.0),
+    "dca": _topology(nodes=[_node(dca=DcaConfig(burst_size=8,
+                                                writeback_threshold=8,
+                                                writeback_timeout_ns=5000))]),
+    "multi-node-targets": _topology(
+        nodes=[_node("a"), _node("b", kind="kernel")],
+        n_clients=4, client_targets=("a", "b", "a", "b"), rate_gbps=1.5,
+        packet_size=300),
+    "slow-links": _topology(link_gbps=10.0, latency_ns=5000, rate_gbps=1.0),
+}
+
+
+def _run_pair(cfg, mode):
+    base = run_topology_experiment(cfg).to_dict()
+    info = PartitionRunInfo()
+    got = run_topology_experiment(cfg.with_partition(mode, workers=2),
+                                  partition_info=info).to_dict()
+    return base, got, info
+
+
+@pytest.mark.parametrize("case", sorted(PARITY_CASES))
+def test_partitioned_bit_identical_to_shared_clock(case):
+    """THE tentpole gate: domain-partitioned execution reproduces the shared
+    loop's RunReport exactly, for every topology shape in the suite."""
+    base, got, info = _run_pair(PARITY_CASES[case], "partitioned")
+    assert info.mode_used == "partitioned", info.fallback_reason
+    assert info.n_windows > 0
+    assert got == base
+
+
+def test_partitioned_mp_bit_identical_to_shared_clock():
+    """Worker processes change nothing: crossings are delivered in
+    (fire_time, birth) order regardless of which process minted them when."""
+    cfg = PARITY_CASES["multi-node-targets"]
+    base, got, info = _run_pair(cfg, "partitioned-mp")
+    assert info.mode_used == "partitioned-mp", info.fallback_reason
+    assert info.n_workers == 2
+    assert got == base
+
+
+def test_domain_count_does_not_change_results():
+    """Satellite: {1, 2, N} execution groups on a 4-node incast produce the
+    identical report — grouping is scheduling, not semantics."""
+    cfg = _topology(nodes=[_node(f"n{i}") for i in range(4)], n_clients=4,
+                    client_targets=("n0", "n1", "n2", "n3"))
+    n_domains = cfg.n_clients + len(cfg.nodes) + 1
+    runs = [run_partitioned_topology(cfg.with_partition("partitioned"),
+                                     n_groups=g).to_dict()
+            for g in (1, 2, n_domains)]
+    assert runs[0] == runs[1] == runs[2]
+    assert runs[0] == run_topology_experiment(cfg).to_dict()
+
+
+def test_assign_groups_shapes():
+    assert assign_groups(5, 1) == [[0, 1, 2, 3, 4]]
+    groups = assign_groups(5, 3)
+    assert groups[-1] == [4]  # the switch domain rides alone
+    assert sorted(d for g in groups for d in g) == [0, 1, 2, 3, 4]
+    assert assign_groups(3, 99)[-1] == [2]  # clamped to n_domains
+
+
+def test_crossings_never_arrive_before_wire_time():
+    """Conservative-window invariant, checked on the real crossing trace: a
+    frame minted at t can reach its destination domain no earlier than the
+    unloaded wire would carry it (serialization + link latency), so a window
+    of min(link_latency) can never deliver into a domain's past."""
+    cfg = PARITY_CASES["multi-node-targets"]
+    trace = []
+    run_partitioned_topology(cfg.with_partition("partitioned"), trace=trace)
+    assert trace, "run produced no boundary crossings"
+    link = cfg.switch.link
+    for _dst, fire_t, birth, kind, payload in trace:
+        frame = payload[1] if kind == "fwd" else payload
+        mint_t = birth[0]
+        unloaded = Wire(gbps=link.gbps,
+                        latency_ns=link.latency_ns).transmit(mint_t,
+                                                             len(frame))
+        assert fire_t >= unloaded
+        assert fire_t >= mint_t + link.latency_ns
+
+
+def test_deliver_due_orders_by_fire_time_then_birth():
+    a = (0, 100, (50, 0, 1, 0), "fwd", None)
+    b = (0, 100, (50, 0, 0, 0), "fwd", None)
+    c = (0, 90, (60, 2, 0, 0), "fwd", None)
+    late = (0, 500, (50, 0, 0, 1), "fwd", None)
+    due, rest = _deliver_due([a, late, b, c], 200)
+    assert due == [c, b, a]
+    assert rest == [late]
+
+
+# -- fallback policy -----------------------------------------------------------
+
+def test_zero_latency_link_falls_back():
+    cfg = _topology(latency_ns=0).with_partition("partitioned")
+    assert "lookahead" in partition_fallback_reason(cfg)
+    info = PartitionRunInfo()
+    rep = run_topology_experiment(cfg, partition_info=info)
+    assert info.mode_used == "shared-clock"
+    assert info.fallback_reason is not None
+    assert rep.to_dict() == run_topology_experiment(
+        cfg.with_partition("shared-clock")).to_dict()
+
+
+def test_zero_cost_stack_falls_back():
+    free = CostConfig(cpu_ghz=2.0, interrupt_cycles=0, syscall_cycles=0,
+                      per_packet_kernel_cycles=0, pmd_poll_cycles=0,
+                      pmd_per_packet_cycles=0)
+    for kind in ("bypass", "kernel"):
+        cfg = _topology(nodes=[_node(kind=kind, cost=free)])
+        assert "zero-cost" in partition_fallback_reason(cfg)
+
+
+def test_pipeline_stack_falls_back():
+    cfg = _topology(nodes=[_node(kind="pipeline")])
+    reason = partition_fallback_reason(cfg)
+    assert "pipeline" in reason and "not proven" in reason
+    info = PartitionRunInfo()
+    rep = run_topology_experiment(cfg.with_partition("partitioned"),
+                                  partition_info=info)
+    assert info.mode_requested == "partitioned"
+    assert info.mode_used == "shared-clock"
+    assert rep.to_dict() == run_topology_experiment(cfg).to_dict()
+
+
+def test_serving_falls_back():
+    import repro.serving  # noqa: F401
+    from repro.serving import RequestMixConfig, ServingConfig
+    s = ServingConfig(mix=RequestMixConfig(prompt_mean_tokens=64,
+                                           prompt_dist="fixed",
+                                           output_mean_tokens=4,
+                                           output_dist="fixed"),
+                      qps=10_000.0, kv_bytes_per_token=256,
+                      kv_segment_bytes=1024, balancer="lb",
+                      prefill=("p0",), decode=("d0",))
+    cfg = TopologyConfig(
+        name="serving-part",
+        nodes=(_node("lb", "balancer"), _node("p0", "prefill"),
+               _node("d0", "decode")),
+        n_clients=1,
+        traffic=TrafficConfig(mode="open_loop", duration_s=0.0005,
+                              sim_time=True, seed=3),
+        serving=s)
+    assert "balancer" in partition_fallback_reason(cfg)
+
+
+def test_eligible_configs_have_no_reason():
+    for case, cfg in PARITY_CASES.items():
+        assert partition_fallback_reason(cfg) is None, case
+
+
+# -- DomainScheduler mechanics -------------------------------------------------
+
+def test_domain_scheduler_orders_by_birth_not_insertion():
+    """Two events at one instant run in birth order even when scheduled in
+    the opposite order — the property that makes worker scheduling
+    invisible."""
+    ds = DomainScheduler(SimClock())
+    seen = []
+    ds.schedule_with_birth(100, (50, 2, 1, 0), lambda: seen.append("late"))
+    ds.schedule_with_birth(100, (50, 0, 0, 0), lambda: seen.append("early"))
+    ds.run_until(100)
+    assert seen == ["early", "late"]
+    assert ds.clock.now_ns == 100
+
+
+def test_domain_scheduler_children_sort_after_parent():
+    ds = DomainScheduler(SimClock())
+    seen = []
+
+    def parent():
+        ds.schedule_at(ds.clock.now_ns, lambda: seen.append("child"))
+        seen.append("parent")
+
+    ds.begin_phase(0, 0, 0)
+    ds.schedule_at(10, parent)
+    ds.schedule_at(10, lambda: seen.append("sibling"))
+    ds.run_until(10)
+    # the sibling was minted at t=0 (phase context), the child at t=10
+    # (inside the parent's execution) — lexicographic birth order IS mint
+    # order, so the earlier-born sibling runs before the child
+    assert seen == ["parent", "sibling", "child"]
+
+
+def test_domain_scheduler_phase_counter_persists_within_instant():
+    ds = DomainScheduler(SimClock())
+    ds.begin_phase(5, 0, 0)
+    b1 = ds.mint_birth()
+    ds.begin_phase(5, 0, 0)  # re-round at the same instant
+    b2 = ds.mint_birth()
+    assert b1 == (5, 0, 0, 0) and b2 == (5, 0, 0, 1)
+    ds.begin_phase(6, 0, 0)  # new instant resets the counter
+    assert ds.mint_birth() == (6, 0, 0, 0)
+
+
+def test_domain_scheduler_cancel():
+    ds = DomainScheduler(SimClock())
+    seen = []
+    tok = ds.schedule_at(10, lambda: seen.append("dead"))
+    ds.schedule_at(10, lambda: seen.append("live"))
+    assert ds.cancel(tok)
+    assert not ds.cancel(tok)
+    assert len(ds) == 1
+    ds.run_until(20)
+    assert seen == ["live"]
+    assert ds.next_time_ns() is None
+
+
+# -- engine composition (satellite: epoch taxonomy) ----------------------------
+
+def test_partition_records_epoch_fallback_reason():
+    """TrafficConfig.engine='epoch' composes with partitioned execution: the
+    epoch fast path refuses with the documented reason, the partitioned
+    event loop runs, and the report still matches shared-clock exactly."""
+    from repro.core import EpochRunInfo, PARTITIONED_REASON
+    from dataclasses import replace
+    cfg = PARITY_CASES["bypass-2c"]
+    cfg_epoch = replace(cfg, traffic=replace(cfg.traffic, engine="epoch"),
+                        partition="partitioned")
+    info = EpochRunInfo()
+    rep = run_topology_experiment(cfg_epoch, info=info)
+    assert info.fallback_reason == PARTITIONED_REASON
+    assert info.fastpath is False
+    assert rep.to_dict() == run_topology_experiment(cfg).to_dict()
+
+
+def test_partition_knob_does_not_change_seeds():
+    """Execution-only knobs are scrubbed from the seed fingerprint: the
+    partition mode must not perturb which streams the clients draw."""
+    cfg = PARITY_CASES["bypass-2c"]
+    c1 = Cluster.build(cfg)
+    c2 = Cluster.build(cfg.with_partition("partitioned-mp", workers=8))
+    assert [c.seed for c in c1.clients] == [c.seed for c in c2.clients]

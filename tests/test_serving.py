@@ -296,7 +296,10 @@ def test_decode_replica_failover():
     """Kill decode1 mid-run: requests pinned to it strand (counted on the
     failed node), later requests route around it, and the run still
     quiesces deterministically."""
-    s = _serving(fail_node="decode1", fail_at_s=0.0005)
+    # the failure instant must land while decode1 still has requests in
+    # flight; that depends on the (content-derived) client seeds, so it is
+    # re-tuned whenever the seed derivation changes
+    s = _serving(fail_node="decode1", fail_at_s=0.0004)
     cfg = _topology(s, n_clients=2, duration_s=0.002)
     rep = run_topology_experiment(cfg)
     lost = (rep.extras["n4_decode_failed_drops"]

@@ -1,0 +1,168 @@
+"""Parallel sweep runner + content-derived seeding (PR 8 satellites).
+
+The determinism contract: a suite's merged JSON artifact is a pure function
+of its trial definitions — submission order, worker count, and cache state
+must all be invisible in the bytes.  That only holds because every RNG seed
+derives from config *content* (``repro.exp.seeding``), so these tests pin
+the two layers together.
+"""
+import json
+import random
+
+import pytest
+
+from benchmarks import suite
+from benchmarks.common import experiment_config
+from benchmarks.run import needs_csv_header, select_sections
+from repro.exp import (TrafficConfig, config_fingerprint, derive_seed)
+from repro.exp.seeding import scrub_execution_keys
+
+
+def _trials(n_rates=2):
+    base = experiment_config(
+        "bypass",
+        traffic=TrafficConfig(mode="open_loop", rate_gbps=1.0,
+                              duration_s=0.0001, packet_size=256,
+                              sim_time=True),
+        name="mini").to_dict()
+    return suite.expand_grid("mini", "experiment", base, [
+        ("traffic.rate_gbps", [0.5, 1.0][:n_rates]),
+        ("traffic.packet_size", [256, 512]),
+    ])
+
+
+def _dumps(merged):
+    return json.dumps(merged, sort_keys=True)
+
+
+# -- runner determinism --------------------------------------------------------
+
+def test_shuffled_submission_is_byte_identical():
+    """Satellite regression: submitting trials in a shuffled order yields a
+    byte-identical merged artifact (ordering lives in trial definitions, and
+    nothing wall-clock-dependent leaks in)."""
+    trials = _trials()
+    ref, _ = suite.run_suite(trials)
+    for seed in (1, 2):
+        order = list(range(len(trials)))
+        random.Random(seed).shuffle(order)
+        shuffled, _ = suite.run_suite(trials, submit_order=order)
+        assert _dumps(shuffled) == _dumps(ref)
+
+
+def test_worker_pool_is_byte_identical():
+    trials = _trials()
+    serial, _ = suite.run_suite(trials, workers=1)
+    parallel, t = suite.run_suite(trials, workers=2)
+    assert _dumps(parallel) == _dumps(serial)
+    assert t["workers"] == 2 and t["n_trials"] == len(trials)
+
+
+def test_cache_round_trip(tmp_path):
+    trials = _trials()
+    cold, t_cold = suite.run_suite(trials, cache_dir=str(tmp_path))
+    warm, t_warm = suite.run_suite(trials, cache_dir=str(tmp_path))
+    assert t_cold["n_cache_hits"] == 0
+    assert t_warm["n_cache_hits"] == len(trials)
+    assert _dumps(warm) == _dumps(cold)
+
+
+def test_cache_key_tracks_config_content(tmp_path):
+    t1 = _trials()[0]
+    bumped = suite.Trial(name=t1.name, kind=t1.kind,
+                         config={**t1.config,
+                                 "traffic": {**t1.config["traffic"],
+                                             "seed": 999}})
+    assert suite.trial_key(t1) != suite.trial_key(bumped)
+    assert suite.trial_key(t1) == suite.trial_key(
+        suite.Trial(name="other-name-same-config", kind=t1.kind,
+                    config=json.loads(json.dumps(t1.config))))
+
+
+def test_write_suite_json_is_stable(tmp_path):
+    trials = _trials()
+    merged, _ = suite.run_suite(trials)
+    p1, p2 = tmp_path / "a.json", tmp_path / "b.json"
+    suite.write_suite_json(str(p1), merged)
+    order = list(range(len(trials)))
+    random.Random(9).shuffle(order)
+    merged2, _ = suite.run_suite(trials, submit_order=order)
+    suite.write_suite_json(str(p2), merged2)
+    assert p1.read_bytes() == p2.read_bytes()
+
+
+def test_grid_expansion_shapes_and_errors():
+    trials = _trials()
+    assert [t.name for t in trials] == [
+        "mini/rate_gbps=0.5,packet_size=256",
+        "mini/rate_gbps=0.5,packet_size=512",
+        "mini/rate_gbps=1.0,packet_size=256",
+        "mini/rate_gbps=1.0,packet_size=512",
+    ]
+    assert all(t.config["name"] == t.name for t in trials)
+    assert trials[1].config["traffic"]["packet_size"] == 512
+    with pytest.raises(KeyError):
+        suite.expand_grid("bad", "experiment", trials[0].config,
+                          [("traffic.no_such_knob", [1])])
+    with pytest.raises(ValueError):
+        suite.expand_grid("bad", "nonsense-kind", trials[0].config, [])
+    with pytest.raises(ValueError):
+        suite.run_suite(trials, submit_order=[0, 0, 1, 2])
+
+
+def test_replicates_reseed_stably():
+    t = _trials()[0]
+    reps = suite.with_replicates([t], 3)
+    assert [r.name for r in reps] == [f"{t.name}@r{i}" for i in range(3)]
+    seeds = [r.config["traffic"]["seed"] for r in reps]
+    assert len(set(seeds)) == 3
+    # derived, not positional: same trial content → same replicate seeds
+    again = suite.with_replicates([t], 3)
+    assert [r.config["traffic"]["seed"] for r in again] == seeds
+
+
+# -- seeding -------------------------------------------------------------------
+
+def test_fingerprint_scrubs_execution_only_knobs():
+    cfg = {"name": "a", "partition": "partitioned", "partition_workers": 4,
+           "traffic": {"seed": 7, "engine": "epoch", "rate_gbps": 1.0},
+           "nodes": [{"name": "srv"}]}
+    scrubbed = scrub_execution_keys(cfg)
+    assert "partition" not in scrubbed and "name" not in scrubbed
+    assert "engine" not in scrubbed["traffic"]
+    assert scrubbed["traffic"]["seed"] == 7  # physics knobs stay
+    twin = dict(cfg, name="b", partition="shared-clock", partition_workers=0)
+    assert config_fingerprint(cfg) == config_fingerprint(twin)
+    assert config_fingerprint(cfg) != config_fingerprint(
+        {**cfg, "traffic": {**cfg["traffic"], "seed": 8}})
+
+
+def test_derive_seed_is_stable_and_decorrelated():
+    fp = config_fingerprint({"x": 1})
+    assert derive_seed(fp, 0, "client") == derive_seed(fp, 0, "client")
+    assert derive_seed(fp, 0, "client") != derive_seed(fp, 1, "client")
+    assert derive_seed(fp, 0, "client") != derive_seed(fp, 0, "replicate")
+    s = derive_seed(fp, 3, "client")
+    assert 0 <= s < 2 ** 63  # numpy and random.Random both accept it
+
+
+# -- run.py section plumbing (satellite: no stray CSV header) ------------------
+
+SECTIONS = [("fig3a", "csv", None), ("fastpath", "text", None),
+            ("parallel", "text", None)]
+
+
+def test_select_sections():
+    assert [s[0] for s in select_sections(SECTIONS, None)] == \
+        ["fig3a", "fastpath", "parallel"]
+    assert [s[0] for s in select_sections(SECTIONS, "fastpath")] == \
+        ["fastpath"]
+    assert select_sections(SECTIONS, "nope") == []
+
+
+def test_csv_header_only_for_csv_sections():
+    assert needs_csv_header(select_sections(SECTIONS, None))
+    assert needs_csv_header(select_sections(SECTIONS, "fig3a"))
+    assert not needs_csv_header(select_sections(SECTIONS, "fastpath"))
+    assert not needs_csv_header(select_sections(SECTIONS, "parallel"))
+    assert not needs_csv_header([])
