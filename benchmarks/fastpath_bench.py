@@ -37,9 +37,9 @@ def _cfg(engine: str, duration_s: float):
 
 
 def _run(engine: str, duration_s: float) -> Dict[str, float]:
-    t0 = time.perf_counter()
+    t0 = time.perf_counter()  # simlint: disable=SL001 -- bench wall timing
     rep = run_experiment(_cfg(engine, duration_s))
-    wall = time.perf_counter() - t0
+    wall = time.perf_counter() - t0  # simlint: disable=SL001 -- bench wall timing
     return {"duration_s": duration_s, "packets": float(rep.sent),
             "received": float(rep.received), "wall_s": wall,
             "sim_pkts_per_s": rep.sent / wall if wall > 0 else 0.0}

@@ -19,10 +19,10 @@ from .common import emit
 def _time(fn, *args, iters: int = 5) -> float:
     fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    t0 = time.perf_counter()  # simlint: disable=SL001 -- bench wall timing
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+    return (time.perf_counter() - t0) / iters * 1e6  # us  # simlint: disable=SL001 -- bench wall timing
 
 
 def run() -> None:

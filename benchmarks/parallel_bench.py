@@ -95,10 +95,10 @@ def _partition_section(quick: bool) -> Dict[str, Any]:
     infos: Dict[str, PartitionRunInfo] = {}
     for mode in ("shared-clock", "partitioned", "partitioned-mp"):
         pi = PartitionRunInfo()
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()  # simlint: disable=SL001 -- bench wall timing
         rep = run_topology_experiment(cfg.with_partition(mode),
                                       partition_info=pi)
-        walls[mode] = time.perf_counter() - t0
+        walls[mode] = time.perf_counter() - t0  # simlint: disable=SL001 -- bench wall timing
         reports[mode] = rep.to_dict()
         infos[mode] = pi
     for mode in ("partitioned", "partitioned-mp"):

@@ -196,7 +196,7 @@ def run_suite(trials: Sequence[Trial], workers: int = 1,
     keys = [trial_key(t) for t in trials]
     results: Dict[int, Dict[str, Any]] = {}
     cache_hits = 0
-    t0 = time.perf_counter()
+    t0 = time.perf_counter()  # simlint: disable=SL001 -- bench wall timing
     todo: List[int] = []
     for i in order:
         cached = _cache_load(cache_dir, keys[i]) if cache_dir else None
@@ -218,7 +218,7 @@ def run_suite(trials: Sequence[Trial], workers: int = 1,
     if cache_dir:
         for i in todo:
             _cache_store(cache_dir, keys[i], results[i])
-    wall_s = time.perf_counter() - t0
+    wall_s = time.perf_counter() - t0  # simlint: disable=SL001 -- bench wall timing
     merged = {t.name: {"kind": t.kind, "config": t.config,
                        "report": results[i]}
               for i, t in enumerate(trials)}

@@ -5,7 +5,9 @@ from .dataplane import BypassDataplane, FeedStats, KernelStackFeed, make_feed
 from .dca import BurstPlan, OccupancyTrace, run_burst_experiment
 from .descriptor import RxDescriptorRing, TxDescriptorRing, STATUS_DONE, STATUS_FREE
 from .ethdev import EthConf, EthDev, EthDevError, EthDevState, EthStats
-from .fastpath import EpochRunInfo, PARTITIONED_REASON, run_epoch_sim
+from .fastpath import (EPOCH_FALLBACK_REASONS, EpochRunInfo,
+                       PARTITIONED_REASON, run_epoch_sim,
+                       validate_epoch_fallback_reason)
 from .kernel_stack import KernelStackServer, KernelStats
 from .loadgen import LoadGen, TrafficPattern, find_max_sustainable_bandwidth
 from .netstack import Lcore, NetworkStack, ServerStats
@@ -43,9 +45,11 @@ from .packet import (
     write_packets_vec,
     write_seq,
 )
-from .partition import (ClientDomain, Crossing, DomainScheduler, DomainSwitch,
+from .partition import (PARTITION_FALLBACK_REASONS, CausalityError,
+                        ClientDomain, Crossing, DomainScheduler, DomainSwitch,
                         MpPartitionEngine, NodeDomain, PartitionEngine,
-                        PartitionRunInfo, SwitchDomain, assign_groups)
+                        PartitionRunInfo, PartitionSanitizer, SwitchDomain,
+                        assign_groups, validate_partition_fallback_reason)
 from .pmd import BypassL2FwdServer, PipelineServer, Port
 from .rings import SpscRing
 from .simclock import EventScheduler, SimClock, Wire
@@ -56,15 +60,19 @@ from .telemetry import (LatencyRecorder, LatencyStats, QueueTelemetry,
                         writeback_extras)
 
 __all__ = [
-    "BypassDataplane", "BypassL2FwdServer", "BurstPlan", "ClientDomain",
+    "BypassDataplane", "BypassL2FwdServer", "BurstPlan", "CausalityError",
+    "ClientDomain",
     "Crossing", "DomainScheduler", "DomainSwitch", "EthConf", "EthDev",
-    "EpochRunInfo",
+    "EPOCH_FALLBACK_REASONS", "EpochRunInfo",
     "EthDevError", "EthDevState", "EthStats", "EventScheduler", "FeedStats",
+    "validate_epoch_fallback_reason", "validate_partition_fallback_reason",
     "HostCostModel", "KernelStackFeed", "KernelStackServer", "KernelStats",
     "LatencyRecorder", "LatencyStats", "Lcore", "LoadGen",
     "MpPartitionEngine", "NetworkStack", "NodeDomain",
-    "OccupancyTrace", "PARTITIONED_REASON", "PacketPool", "PacketRef",
-    "PartitionEngine", "PartitionRunInfo", "PipelineServer", "Port",
+    "OccupancyTrace", "PARTITIONED_REASON", "PARTITION_FALLBACK_REASONS",
+    "PacketPool", "PacketRef",
+    "PartitionEngine", "PartitionRunInfo", "PartitionSanitizer",
+    "PipelineServer", "Port",
     "QueueTelemetry", "RssIndirection", "RunReport", "RxDescriptorRing",
     "ServerStats", "SimClock", "SpscRing", "Switch", "SwitchDomain",
     "SwitchPort",

@@ -62,8 +62,8 @@ def spin_ns(duration_ns: float) -> None:
     """
     if duration_ns <= 0:
         return
-    deadline = time.perf_counter_ns() + int(duration_ns)
-    while time.perf_counter_ns() < deadline:
+    deadline = time.perf_counter_ns() + int(duration_ns)  # simlint: disable=SL001 -- wall-mode host-cost spin
+    while time.perf_counter_ns() < deadline:  # simlint: disable=SL001 -- wall-mode host-cost spin
         pass
 
 

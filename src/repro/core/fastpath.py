@@ -52,6 +52,7 @@ actually allocated).
 """
 from __future__ import annotations
 
+import re
 from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Optional, Tuple
 
@@ -65,8 +66,9 @@ from .pmd import BypassL2FwdServer
 from .simclock import SimClock
 from .telemetry import RunReport
 
-__all__ = ["EpochRunInfo", "PARTITIONED_REASON", "run_epoch_sim",
-           "iter_epoch_slices", "default_epoch_ns"]
+__all__ = ["EpochRunInfo", "EPOCH_FALLBACK_REASONS", "PARTITIONED_REASON",
+           "run_epoch_sim", "iter_epoch_slices", "default_epoch_ns",
+           "validate_epoch_fallback_reason"]
 
 # fallback-taxonomy reason for topology runs executing under a partition
 # engine (TopologyConfig.partition != "shared-clock"): domains advance on
@@ -74,6 +76,51 @@ __all__ = ["EpochRunInfo", "PARTITIONED_REASON", "run_epoch_sim",
 # run falls back cleanly to the (partitioned) event loop and surfaces this
 # reason in EpochRunInfo rather than erroring.
 PARTITIONED_REASON = "partitioned domain execution"
+
+# The closed taxonomy of epoch fallback reasons.  Every string assigned to
+# ``EpochRunInfo.fallback_reason`` must be one of these literals or match
+# one of the parameterized patterns below — a typo'd or ad-hoc reason fails
+# loudly at assignment instead of silently fragmenting the taxonomy that
+# ``tests/test_fallback_taxonomy.py`` and sweep tooling key on.
+EPOCH_FALLBACK_REASONS: Tuple[str, ...] = (
+    "no SimClock attached",
+    "custom packet-processing function",
+    "DCA accumulate mode",
+    "pending queue accumulation deadlines",
+    "integrity verification enabled",
+    "pending scheduler events",
+    "no ports",
+    "server and loadgen port lists differ",
+    "zero-cost host model",
+    "writeback-timeout timers armed",
+    "writeback DMA latency armed",
+    "RX ring not idle",
+    "TX ring not idle",
+    "lcore burst exceeds loadgen max_tx_burst (TX would linger)",
+    "lcore burst exceeds TX ring size",
+    "RX ring would fill (overflow writeback/drop regime)",
+    "packet pool would exhaust",
+    PARTITIONED_REASON,
+)
+
+# reasons carrying an interpolated server type / exception repr
+_EPOCH_REASON_PATTERNS = (
+    re.compile(r"server type \S+ is not BypassL2FwdServer"),
+    re.compile(r"planning failed: .*", re.DOTALL),
+)
+
+
+def validate_epoch_fallback_reason(reason: Optional[str]) -> None:
+    """Raise ``ValueError`` unless ``reason`` is None, a literal from
+    :data:`EPOCH_FALLBACK_REASONS`, or matches a parameterized pattern."""
+    if reason is None or reason in EPOCH_FALLBACK_REASONS:
+        return
+    for pat in _EPOCH_REASON_PATTERNS:
+        if pat.fullmatch(reason):
+            return
+    raise ValueError(
+        f"unknown epoch fallback reason {reason!r}: not in the closed "
+        "EPOCH_FALLBACK_REASONS taxonomy (repro.core.fastpath)")
 
 # target packets per epoch pass: large enough to amortize numpy/JAX dispatch,
 # small enough that slicing is exercised (and memory stays bounded per pass)
@@ -132,6 +179,13 @@ class EpochRunInfo:
     used_jax: bool = False
     n_epochs: int = 0
     n_packets: int = 0
+
+    def __setattr__(self, name: str, value) -> None:
+        # dataclass __init__ assigns via setattr, so construction-time
+        # reasons are validated too
+        if name == "fallback_reason":
+            validate_epoch_fallback_reason(value)
+        object.__setattr__(self, name, value)
 
 
 class _QueuePlan:

@@ -381,11 +381,11 @@ class LoadGen:
                 and getattr(server, "clock", None) is not clock:
             server.attach_clock(clock)
         poll_at = getattr(server, "poll_at", None) if clock is not None else None
-        start = time.perf_counter_ns() if clock is None else clock.now_ns
+        start = time.perf_counter_ns() if clock is None else clock.now_ns  # simlint: disable=SL001 -- wall-clock pacing mode
         rounds = 0
         while self.flight.received < n_packets:
             rounds += 1
-            now = time.perf_counter_ns() if clock is None else clock.now_ns
+            now = time.perf_counter_ns() if clock is None else clock.now_ns  # simlint: disable=SL001 -- wall-clock pacing mode
             while sent < n_packets and (sent - self.flight.received) < window:
                 self._send_one(self.ports[sent % len(self.ports)], packet_size, now, rng)
                 sent += 1
@@ -393,7 +393,7 @@ class LoadGen:
                 port.flush_rx()  # closed loop: no idle traffic to trigger writeback
             if clock is None:
                 server.poll_once()
-                now = time.perf_counter_ns()
+                now = time.perf_counter_ns()  # simlint: disable=SL001 -- wall-clock pacing mode
             else:
                 clock.advance(round_ns)  # the quantum packets spend in service
                 if poll_at is not None:
@@ -404,7 +404,7 @@ class LoadGen:
             for port in self.ports:
                 self._drain_port(port, now)
             if clock is None:
-                if time.perf_counter_ns() - start > 60e9:
+                if time.perf_counter_ns() - start > 60e9:  # simlint: disable=SL001 -- wall-clock pacing mode
                     break  # safety: never hang a test
             elif rounds >= max_rounds:
                 break  # safety: never hang a test (virtual-time analogue)
@@ -558,13 +558,13 @@ class LoadGen:
         times, sizes = pattern.emission_schedule(duration_ns, rng)
         n_sched = len(times)
         fixed_size = pattern.trace is None
-        start = time.perf_counter_ns()
+        start = time.perf_counter_ns()  # simlint: disable=SL001 -- wall-clock pacing mode
         end = start + duration_ns
         if n_sched:
             self.meter.open_window(start + int(times[0]))
         sent_i = 0
         while True:
-            now = time.perf_counter_ns()
+            now = time.perf_counter_ns()  # simlint: disable=SL001 -- wall-clock pacing mode
             if now >= end:
                 break
             # how many scheduled emissions are due by now?
@@ -588,19 +588,19 @@ class LoadGen:
                                        rng if use_rng_payload else None)
                         sent_i += 1
             server.poll_once()
-            now = time.perf_counter_ns()
+            now = time.perf_counter_ns()  # simlint: disable=SL001 -- wall-clock pacing mode
             for port in self.ports:
                 self._drain_port(port, now)
         # drain in-flight tail so drop accounting is exact
-        drain_end = time.perf_counter_ns() + int(drain_timeout_s * 1e9)
+        drain_end = time.perf_counter_ns() + int(drain_timeout_s * 1e9)  # simlint: disable=SL001 -- wall-clock pacing mode
         while (self.flight.received < self.flight.sent
-               and time.perf_counter_ns() < drain_end):
+               and time.perf_counter_ns() < drain_end):  # simlint: disable=SL001 -- wall-clock pacing mode
             for port in self.ports:
                 port.flush_rx()
             if server.poll_once() == 0 and all(p.tx_pending == 0 for p in self.ports):
                 # nothing moving and nothing queued: remaining packets were dropped
                 break
-            now = time.perf_counter_ns()
+            now = time.perf_counter_ns()  # simlint: disable=SL001 -- wall-clock pacing mode
             for port in self.ports:
                 self._drain_port(port, now)
         return self._report(

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import heapq
 import multiprocessing
+import re
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -51,7 +52,9 @@ from .telemetry import writeback_extras
 __all__ = [
     "Crossing", "DomainScheduler", "ClientDomain", "NodeDomain",
     "SwitchDomain", "DomainSwitch", "PartitionEngine", "MpPartitionEngine",
-    "PartitionRunInfo", "assign_groups",
+    "PartitionRunInfo", "PartitionSanitizer", "CausalityError",
+    "PARTITION_FALLBACK_REASONS", "assign_groups",
+    "validate_partition_fallback_reason",
 ]
 
 # one frame crossing a domain boundary:
@@ -61,6 +64,39 @@ __all__ = [
 Crossing = Tuple[int, int, tuple, str, object]
 
 _PRE_RUN_CTX = (-1,)  # births minted before any phase/event context
+
+# The closed taxonomy of partition fallback reasons.  Every string stamped
+# into ``PartitionRunInfo.fallback_reason`` must fullmatch one of these
+# patterns (``.+`` spans the ``{name!r}``/``{kind!r}`` interpolations of
+# ``repro.exp.topology.partition_fallback_reason``).  Keeping the list here,
+# next to the dataclass that enforces it, means a typo'd or ad-hoc reason
+# fails loudly at assignment instead of silently fragmenting the taxonomy
+# that tests and sweep tooling key on.
+PARTITION_FALLBACK_REASONS: Tuple[str, ...] = (
+    r"serving topology: balancer reads live cross-domain state",
+    r"zero-latency links leave no conservative lookahead window",
+    r"node .+: zero-cost PMD model needs the shared loop's "
+    r"every-round polling",
+    r"node .+: zero-cost kernel model needs the shared loop's "
+    r"every-round polling",
+    r"node .+: stack kind .+ not proven partition-equivalent",
+)
+
+_PARTITION_REASON_RES = tuple(re.compile(p) for p in
+                              PARTITION_FALLBACK_REASONS)
+
+
+def validate_partition_fallback_reason(reason: Optional[str]) -> None:
+    """Raise ``ValueError`` unless ``reason`` is None or matches the closed
+    :data:`PARTITION_FALLBACK_REASONS` taxonomy."""
+    if reason is None:
+        return
+    for pat in _PARTITION_REASON_RES:
+        if pat.fullmatch(reason):
+            return
+    raise ValueError(
+        f"unknown partition fallback reason {reason!r}: not in the closed "
+        "PARTITION_FALLBACK_REASONS taxonomy (repro.core.partition)")
 
 
 @dataclass
@@ -74,6 +110,96 @@ class PartitionRunInfo:
     n_domains: int = 0
     n_windows: int = 0
     n_workers: int = 0
+    n_sanitized: int = 0  # crossings checked by PartitionSanitizer (0 = off)
+
+    def __setattr__(self, name: str, value) -> None:
+        # dataclass __init__ assigns via setattr, so construction-time
+        # reasons are validated too
+        if name == "fallback_reason":
+            validate_partition_fallback_reason(value)
+        object.__setattr__(self, name, value)
+
+
+class CausalityError(RuntimeError):
+    """A crossing violated the conservative-parallel invariant: it fired
+    before its link-latency bound, before its destination's clock, or out of
+    (fire_t, birth) order — any of which means domain state diverged from the
+    shared-clock loop (a determinism race, not a modeling choice)."""
+
+
+class PartitionSanitizer:
+    """Always-available runtime race detector for crossing delivery.
+
+    :mod:`tests.test_partition_property` proves (via hypothesis) that every
+    crossing respects the conservative bound; this class promotes that
+    property into a production check the engines can run on every delivery.
+    Three invariants, all cheap enough to leave on for whole parity corpora:
+
+    1. **Link-latency bound.**  Every crossing is minted by a wire transmit
+       at its birth instant, so a frame can never legally fire before
+       ``birth_t + serialization_ns(len(frame)) + latency_ns`` — the
+       fresh-wire (idle-FIFO) lower bound of
+       :meth:`repro.core.simclock.Wire.transmit`.
+    2. **Destination clock.**  Due crossings are delivered at a window start;
+       the destination domain only ever advanced strictly below the previous
+       window end, which the crossing's fire time must meet or exceed.
+    3. **Per-destination delivery order.**  ``_deliver_due`` hands each
+       domain its crossings sorted by ``(fire_t, birth)`` under a monotone
+       window end, so the delivery key per destination must never decrease.
+
+    ``latency_ns`` is the conservative (minimum) link latency — the engines'
+    ``delta``.  ``gbps <= 0`` drops the serialization term, keeping the bound
+    sound for mixed-rate fabrics.
+    """
+
+    def __init__(self, latency_ns: int, gbps: float = 0.0):
+        self.latency_ns = int(latency_ns)
+        self.gbps = float(gbps)
+        self.checked = 0
+        self._last: Dict[int, Tuple[int, tuple]] = {}
+
+    def _serialization_ns(self, nbytes: int) -> int:
+        if self.gbps <= 0:
+            return 0
+        return int(round(nbytes * 8 / self.gbps))
+
+    @staticmethod
+    def _frame_len(crossing: Crossing) -> int:
+        payload = crossing[4]
+        if crossing[3] == "fwd":
+            payload = payload[1]
+        try:
+            return len(payload)
+        except TypeError:
+            return 0
+
+    def check(self, crossing: Crossing,
+              dst_clock_ns: Optional[int] = None) -> None:
+        """Validate one crossing just before delivery; raises
+        :class:`CausalityError` on any invariant breach."""
+        dst, fire_t, birth, kind, _payload = crossing
+        self.checked += 1
+        bound = (int(birth[0]) + self._serialization_ns(
+            self._frame_len(crossing)) + self.latency_ns)
+        if fire_t < bound:
+            raise CausalityError(
+                f"crossing to domain {dst} ({kind}) fires at {fire_t} ns, "
+                f"before its conservative bound {bound} ns (birth "
+                f"{birth!r} + serialization + link latency "
+                f"{self.latency_ns} ns)")
+        if dst_clock_ns is not None and fire_t < dst_clock_ns:
+            raise CausalityError(
+                f"crossing to domain {dst} ({kind}) fires at {fire_t} ns, "
+                f"behind the destination clock at {dst_clock_ns} ns — the "
+                "domain already simulated past the delivery instant")
+        key = (int(fire_t), tuple(birth))
+        prev = self._last.get(dst)
+        if prev is not None and key < prev:
+            raise CausalityError(
+                f"crossing to domain {dst} ({kind}) delivered out of order: "
+                f"key {key!r} after {prev!r} — (fire_t, birth) delivery "
+                "order per destination must be non-decreasing")
+        self._last[dst] = key
 
 
 class DomainScheduler:
@@ -488,7 +614,8 @@ class PartitionEngine:
     def __init__(self, domains: Sequence[_DomainBase], delta: int,
                  outbox: List[Crossing], n_groups: int = 1,
                  max_rounds: int = 50_000_000,
-                 trace: Optional[List[Crossing]] = None):
+                 trace: Optional[List[Crossing]] = None,
+                 sanitizer: Optional[PartitionSanitizer] = None):
         if delta < 1:
             raise ValueError("partitioned execution needs link latency >= 1ns")
         self.domains = list(domains)
@@ -497,6 +624,7 @@ class PartitionEngine:
         self.groups = assign_groups(len(self.domains), n_groups)
         self.max_rounds = max_rounds
         self.trace = trace
+        self.sanitizer = sanitizer
         self.n_windows = 0
 
     def _drain_outbox(self, pending: List[Crossing]) -> None:
@@ -518,6 +646,9 @@ class PartitionEngine:
                 w_end = min(cands) + self.delta
                 due, pending = _deliver_due(pending, w_end)
                 for c in due:
+                    if self.sanitizer is not None:
+                        self.sanitizer.check(
+                            c, self.domains[c[0]].clock.now_ns)
                     self.domains[c[0]].accept(c)
                 for group in self.groups:
                     for di in group:
@@ -627,11 +758,13 @@ class MpPartitionEngine:
 
     def __init__(self, cfg_dict: dict, builder: Tuple[str, str],
                  n_domains: int, delta: int, n_workers: int,
-                 max_rounds: int = 50_000_000):
+                 max_rounds: int = 50_000_000,
+                 sanitizer: Optional[PartitionSanitizer] = None):
         if delta < 1:
             raise ValueError("partitioned execution needs link latency >= 1ns")
         self.delta = int(delta)
         self.max_rounds = max_rounds
+        self.sanitizer = sanitizer
         self.n_windows = 0
         self.final_clock_ns = 0
         groups = assign_groups(n_domains, n_workers)
@@ -689,6 +822,9 @@ class MpPartitionEngine:
                 flushed_idle = False
                 w_end = min(cvals) + self.delta
                 due, pending = _deliver_due(pending, w_end)
+                if self.sanitizer is not None:
+                    for c in due:
+                        self.sanitizer.check(c, clocks.get(c[0]))
                 active = []
                 for wi, conn in enumerate(self._conns):
                     mine = [c for c in due if c[0] in self._ownset[wi]]

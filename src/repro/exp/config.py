@@ -596,6 +596,10 @@ class TopologyConfig:
     # execution engine (never affects results — see PARTITION_MODES)
     partition: str = "shared-clock"
     partition_workers: int = 0
+    # run every partitioned crossing through the PartitionSanitizer race
+    # detector (also forced on by env REPRO_PARTITION_SANITIZE=1); execution
+    # -only — scrubbed from seed fingerprints like partition itself
+    partition_sanitize: bool = False
     # per-client destination node names (len == n_clients); None == all
     # clients send to ``target``
     client_targets: Optional[Tuple[str, ...]] = None
@@ -709,5 +713,9 @@ class TopologyConfig:
     def with_switch(self, **kw: Any) -> "TopologyConfig":
         return replace(self, switch=replace(self.switch, **kw))
 
-    def with_partition(self, mode: str, workers: int = 0) -> "TopologyConfig":
-        return replace(self, partition=mode, partition_workers=workers)
+    def with_partition(self, mode: str, workers: int = 0,
+                       sanitize: Optional[bool] = None) -> "TopologyConfig":
+        kw: Dict[str, Any] = dict(partition=mode, partition_workers=workers)
+        if sanitize is not None:
+            kw["partition_sanitize"] = sanitize
+        return replace(self, **kw)

@@ -27,12 +27,14 @@ __all__ = ["EXECUTION_ONLY_KEYS", "scrub_execution_keys",
 
 # top-level config keys that select *how* a run executes, never *what* it
 # simulates; they must not perturb any derived seed
-EXECUTION_ONLY_KEYS = ("name", "partition", "partition_workers")
+EXECUTION_ONLY_KEYS = ("name", "partition", "partition_workers",
+                       "partition_sanitize")
 
 
 def scrub_execution_keys(cfg_dict: Dict[str, Any]) -> Dict[str, Any]:
     """A copy of a config dict with execution-only knobs removed (top-level
-    ``name``/``partition``/``partition_workers`` and ``traffic.engine``)."""
+    ``name``/``partition``/``partition_workers``/``partition_sanitize`` and
+    ``traffic.engine``)."""
     out = {k: v for k, v in cfg_dict.items() if k not in EXECUTION_ONLY_KEYS}
     traffic = out.get("traffic")
     if isinstance(traffic, dict):

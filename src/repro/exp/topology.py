@@ -60,7 +60,7 @@ from repro.core.packet import (l2fwd_echo, l2fwd_echo_vec, swap_macs,
 from repro.core.partition import (ClientDomain, Crossing, DomainScheduler,
                                   DomainSwitch, MpPartitionEngine, NodeDomain,
                                   PartitionEngine, PartitionRunInfo,
-                                  SwitchDomain)
+                                  PartitionSanitizer, SwitchDomain)
 
 from .config import CostConfig, NodeConfig, TopologyConfig
 from .seeding import config_fingerprint, derive_seed
@@ -685,6 +685,15 @@ def _report_from_chunks(cfg: TopologyConfig, chunks: Dict[int, Dict[str, object]
         float(final_clock_ns))
 
 
+def _sanitize_enabled(cfg: TopologyConfig) -> bool:
+    """Sanitizer opt-in: the config flag, or the env override (any value but
+    '' / '0' turns it on — CI sets REPRO_PARTITION_SANITIZE=1 for the parity
+    corpus)."""
+    if cfg.partition_sanitize:
+        return True
+    return os.environ.get("REPRO_PARTITION_SANITIZE", "0") not in ("", "0")
+
+
 def run_partitioned_topology(cfg: TopologyConfig, *,
                              info: Optional[PartitionRunInfo] = None,
                              n_groups: int = 1,
@@ -697,7 +706,12 @@ def run_partitioned_topology(cfg: TopologyConfig, *,
     ``info`` (if given) records what actually ran.  ``n_groups`` only
     regroups in-process domain execution (results are identical by
     construction); ``trace``, if a list, collects every boundary
-    :data:`~repro.core.partition.Crossing` for property tests."""
+    :data:`~repro.core.partition.Crossing` for property tests.  With
+    ``cfg.partition_sanitize`` (or env ``REPRO_PARTITION_SANITIZE=1``) every
+    crossing delivery additionally runs through a
+    :class:`~repro.core.partition.PartitionSanitizer`, raising
+    :class:`~repro.core.partition.CausalityError` on any conservative-bound
+    or ordering breach; ``info.n_sanitized`` counts the checks."""
     if info is None:
         info = PartitionRunInfo()
     info.mode_requested = cfg.partition
@@ -715,9 +729,11 @@ def run_partitioned_topology(cfg: TopologyConfig, *,
     workers = cfg.partition_workers
     if cfg.partition == "partitioned-mp" and workers == 0:
         workers = max(2, os.cpu_count() or 1)
+    sanitizer = (PartitionSanitizer(delta, gbps=cfg.switch.link.gbps)
+                 if _sanitize_enabled(cfg) else None)
     if cfg.partition == "partitioned-mp" and workers > 1:
         eng = MpPartitionEngine(cfg.to_dict(), PARTITION_BUILDER, n_domains,
-                                delta, workers)
+                                delta, workers, sanitizer=sanitizer)
         try:
             chunks = eng.run()
         finally:
@@ -725,14 +741,18 @@ def run_partitioned_topology(cfg: TopologyConfig, *,
         info.mode_used = "partitioned-mp"
         info.n_windows = eng.n_windows
         info.n_workers = eng.n_workers
+        if sanitizer is not None:
+            info.n_sanitized = sanitizer.checked
         return _report_from_chunks(cfg, chunks, eng.final_clock_ns)
     # in-process: mode "partitioned", or "partitioned-mp" pinned to 1 worker
     outbox: List[Crossing] = []
     domains = [_build_domain(cfg, i, outbox) for i in range(n_domains)]
     eng = PartitionEngine(domains, delta, outbox, n_groups=n_groups,
-                          trace=trace)
+                          trace=trace, sanitizer=sanitizer)
     eng.run()
     info.mode_used = "partitioned"
     info.n_windows = eng.n_windows
     info.n_workers = 1
+    if sanitizer is not None:
+        info.n_sanitized = sanitizer.checked
     return _report_from_chunks(cfg, eng.chunks(), eng.final_clock_ns)

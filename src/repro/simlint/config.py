@@ -1,0 +1,209 @@
+"""simlint configuration: defaults, ``simlint.toml`` discovery and parsing.
+
+Config may live in a standalone ``simlint.toml`` (a ``[simlint]`` table,
+per-rule subtables like ``[simlint.sl001]``) or inside a pyproject-style
+``[tool.simlint]`` table — both spellings parse to the same
+:class:`SimlintConfig`.  Parsing prefers :mod:`tomllib` (Python >= 3.11)
+and falls back to a minimal built-in TOML-subset reader (tables, strings,
+booleans, integers, and possibly-multiline string arrays) so the linter
+stays dependency-free on 3.10 CI runners.
+"""
+from __future__ import annotations
+
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+# the sim-path scope: the layers whose numbers feed RunReports.  launch/,
+# runtime/, models/ etc. are training/deploy utilities where wall clocks are
+# the point, so the default walk (and the exclude list below) leaves them out.
+DEFAULT_PATHS = (
+    "src/repro/core",
+    "src/repro/exp",
+    "src/repro/serving",
+    "benchmarks",
+)
+
+DEFAULT_EXCLUDE = (
+    "*/__pycache__/*",
+    "src/repro/launch/*",
+    "src/repro/runtime/*",
+    "src/repro/models/*",
+    "src/repro/data/*",
+    "src/repro/checkpoint/*",
+    "src/repro/kernels/*",
+    "src/repro/simlint/*",
+)
+
+# counters the telemetry layer accumulates as int64 (SL004): attribute names
+# used by ThroughputMeter, LoadGen flight stats, EthDev/SwitchPort counters
+DEFAULT_INT64_COUNTERS = (
+    "packets", "bytes", "sent", "received", "dropped",
+    "tx_frames", "rx_frames", "tx_bytes", "rx_bytes",
+    "egress_drops", "egress_enqueued", "unrouted",
+    "ipackets", "opackets", "imissed", "rx_nombuf",
+    "integrity_errors",
+)
+
+CONFIG_FILENAME = "simlint.toml"
+BASELINE_FILENAME = "simlint_baseline.json"
+
+
+@dataclass
+class SimlintConfig:
+    paths: Tuple[str, ...] = DEFAULT_PATHS
+    exclude: Tuple[str, ...] = DEFAULT_EXCLUDE
+    # SL001: file globs where wall-clock reads are expected wholesale
+    sl001_allow: Tuple[str, ...] = ()
+    # SL004: int64 counter attribute names
+    sl004_counters: Tuple[str, ...] = DEFAULT_INT64_COUNTERS
+    baseline: str = BASELINE_FILENAME
+    # directory config values resolve against (where the config file lives)
+    root: str = "."
+
+
+# -- minimal TOML-subset parsing ----------------------------------------------
+
+_TABLE_RE = re.compile(r"^\[\s*([A-Za-z0-9_.\-]+)\s*\]\s*$")
+_KEY_RE = re.compile(r"^([A-Za-z0-9_\-]+)\s*=\s*(.*)$")
+
+
+def _strip_comment(line: str) -> str:
+    """Drop a trailing ``#`` comment (quote-aware for double quotes)."""
+    out = []
+    in_str = False
+    for ch in line:
+        if ch == '"':
+            in_str = not in_str
+        elif ch == "#" and not in_str:
+            break
+        out.append(ch)
+    return "".join(out).rstrip()
+
+
+def _parse_value(raw: str) -> Any:
+    raw = raw.strip()
+    if raw.startswith("["):
+        inner = raw[1:-1] if raw.endswith("]") else raw[1:]
+        return [_parse_value(tok) for tok in _split_array(inner)]
+    if raw.startswith('"') and raw.endswith('"') and len(raw) >= 2:
+        return raw[1:-1]
+    if raw in ("true", "false"):
+        return raw == "true"
+    try:
+        return int(raw)
+    except ValueError:
+        return raw
+
+
+def _split_array(inner: str) -> List[str]:
+    toks, cur, in_str = [], [], False
+    for ch in inner:
+        if ch == '"':
+            in_str = not in_str
+            cur.append(ch)
+        elif ch == "," and not in_str:
+            toks.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    toks.append("".join(cur))
+    return [t.strip() for t in toks if t.strip()]
+
+
+def _parse_toml_subset(text: str) -> Dict[str, Dict[str, Any]]:
+    tables: Dict[str, Dict[str, Any]] = {}
+    current = tables.setdefault("", {})
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        line = _strip_comment(lines[i]).strip()
+        i += 1
+        if not line:
+            continue
+        m = _TABLE_RE.match(line)
+        if m:
+            current = tables.setdefault(m.group(1), {})
+            continue
+        m = _KEY_RE.match(line)
+        if not m:
+            raise ValueError(f"simlint.toml: cannot parse line: {line!r}")
+        key, raw = m.group(1), m.group(2).strip()
+        # multiline array: accumulate until brackets balance
+        while raw.count("[") > raw.count("]") and i < len(lines):
+            raw += " " + _strip_comment(lines[i]).strip()
+            i += 1
+        current[key] = _parse_value(raw)
+    return tables
+
+
+def _load_tables(path: str) -> Dict[str, Dict[str, Any]]:
+    with open(path, "rb") as fh:
+        data = fh.read()
+    try:
+        import tomllib
+        doc = tomllib.loads(data.decode("utf-8"))
+        # flatten nested tables into dotted names, one level of values each
+        flat: Dict[str, Dict[str, Any]] = {}
+
+        def walk(prefix: str, tbl: Dict[str, Any]) -> None:
+            plain = {k: v for k, v in tbl.items() if not isinstance(v, dict)}
+            if plain or prefix:
+                flat.setdefault(prefix, {}).update(plain)
+            for k, v in tbl.items():
+                if isinstance(v, dict):
+                    walk(f"{prefix}.{k}" if prefix else k, v)
+
+        walk("", doc)
+        return flat
+    except ModuleNotFoundError:
+        return _parse_toml_subset(data.decode("utf-8"))
+
+
+def _table(tables: Dict[str, Dict[str, Any]], *names: str) -> Dict[str, Any]:
+    for name in names:
+        if name in tables:
+            return tables[name]
+    return {}
+
+
+def _tup(value: Any, default: Tuple[str, ...]) -> Tuple[str, ...]:
+    if value is None:
+        return default
+    return tuple(str(v) for v in value)
+
+
+def find_config(start: str = ".") -> Optional[str]:
+    """Walk up from ``start`` looking for ``simlint.toml``."""
+    d = os.path.abspath(start)
+    while True:
+        cand = os.path.join(d, CONFIG_FILENAME)
+        if os.path.isfile(cand):
+            return cand
+        parent = os.path.dirname(d)
+        if parent == d:
+            return None
+        d = parent
+
+
+def load_config(path: Optional[str] = None,
+                start: str = ".") -> SimlintConfig:
+    """Load config from ``path`` (or discover ``simlint.toml`` upward from
+    ``start``); missing file → pure defaults rooted at ``start``."""
+    if path is None:
+        path = find_config(start)
+    if path is None:
+        return SimlintConfig(root=os.path.abspath(start))
+    tables = _load_tables(path)
+    top = _table(tables, "simlint", "tool.simlint")
+    sl001 = _table(tables, "simlint.sl001", "tool.simlint.sl001")
+    sl004 = _table(tables, "simlint.sl004", "tool.simlint.sl004")
+    return SimlintConfig(
+        paths=_tup(top.get("paths"), DEFAULT_PATHS),
+        exclude=_tup(top.get("exclude"), DEFAULT_EXCLUDE),
+        sl001_allow=_tup(sl001.get("allow"), ()),
+        sl004_counters=_tup(sl004.get("counters"), DEFAULT_INT64_COUNTERS),
+        baseline=str(top.get("baseline", BASELINE_FILENAME)),
+        root=os.path.dirname(os.path.abspath(path)),
+    )

@@ -289,3 +289,72 @@ def test_partitioned_reason_is_distinct_and_stamped():
     # refusal, not mis-simulation: bit-identical to the shared-clock run
     shared = run_topology_experiment(cfg.with_partition("shared-clock"))
     assert rep.to_dict() == shared.to_dict()
+
+
+# -- the taxonomy is CLOSED (PR 9 satellite) -----------------------------------
+#
+# Both info dataclasses validate every ``fallback_reason`` assignment against
+# a closed reason list, so a typo'd or ad-hoc reason fails loudly at the
+# assignment site instead of silently forking the taxonomy these tests and
+# the sweep tooling key on.
+
+def test_every_documented_epoch_reason_is_in_the_closed_enum():
+    from repro.core.fastpath import validate_epoch_fallback_reason
+    for _name, _make, reason in CONFIG_CASES:
+        validate_epoch_fallback_reason(reason)  # must not raise
+    for reason in (
+            "no SimClock attached",
+            "pending queue accumulation deadlines",
+            "pending scheduler events",
+            "no ports",
+            "server and loadgen port lists differ",
+            "RX ring not idle",
+            "TX ring not idle",
+            "RX ring would fill (overflow writeback/drop regime)",
+            "packet pool would exhaust",
+            "planning failed: ValueError('boom')",
+            "server type PrefillServer is not BypassL2FwdServer",
+            "partitioned domain execution",
+            None):
+        validate_epoch_fallback_reason(reason)
+
+
+def test_epoch_info_rejects_unknown_reason():
+    info = EpochRunInfo()
+    with pytest.raises(ValueError, match="closed"):
+        info.fallback_reason = "RX ring nearly full"  # typo'd variant
+    with pytest.raises(ValueError, match="closed"):
+        EpochRunInfo(fallback_reason="made-up reason")
+    info.fallback_reason = "RX ring not idle"  # exact member: fine
+    info.fallback_reason = None
+
+
+def test_partition_info_rejects_unknown_reason():
+    from repro.core import PartitionRunInfo
+    info = PartitionRunInfo()
+    with pytest.raises(ValueError, match="closed"):
+        info.fallback_reason = "partition disabled"
+    with pytest.raises(ValueError, match="closed"):
+        PartitionRunInfo(fallback_reason="nope")
+    info.fallback_reason = (
+        "serving topology: balancer reads live cross-domain state")
+    info.fallback_reason = None
+
+
+def test_partition_fallback_reasons_cover_the_policy_layer():
+    """Every string ``repro.exp.topology.partition_fallback_reason`` can
+    produce must validate against the closed partition taxonomy."""
+    from repro.core import validate_partition_fallback_reason
+    for reason in (
+            "serving topology: balancer reads live cross-domain state",
+            "zero-latency links leave no conservative lookahead window",
+            "node 'srv': zero-cost PMD model needs the shared loop's "
+            "every-round polling",
+            "node 'srv': zero-cost kernel model needs the shared loop's "
+            "every-round polling",
+            "node 'srv': stack kind 'pipeline' not proven "
+            "partition-equivalent",
+            None):
+        validate_partition_fallback_reason(reason)
+    with pytest.raises(ValueError, match="closed"):
+        validate_partition_fallback_reason("node srv is weird")

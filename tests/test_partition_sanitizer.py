@@ -1,0 +1,168 @@
+"""PartitionSanitizer: the always-available causality race detector (PR 9).
+
+``tests/test_partition_property.py`` proves the conservative-bound property
+only when hypothesis is installed; the sanitizer promotes it into a runtime
+check every environment can run.  Contract under test: with sanitization on,
+(a) every legal crossing passes and reports stay bit-identical to the
+shared-clock loop, (b) any crossing delivered before its link-latency bound,
+behind its destination clock, or out of (fire_t, birth) order raises
+``CausalityError``, and (c) the ``partition_sanitize`` knob is execution-only
+— it must never perturb derived seeds or report content.
+"""
+import numpy as np
+import pytest
+
+from repro.core import CausalityError, PartitionRunInfo, PartitionSanitizer
+from repro.core.partition import PartitionEngine
+from repro.exp import (LinkConfig, NodeConfig, PoolConfig, PortConfig,
+                       StackConfig, SwitchConfig, TopologyConfig,
+                       TrafficConfig, run_partitioned_topology,
+                       run_topology_experiment)
+from repro.exp.seeding import config_fingerprint
+from repro.exp.topology import _build_domain
+
+
+def _topology(latency_ns=1000, link_gbps=100.0, n_clients=2):
+    return TopologyConfig(
+        name="sanitize",
+        nodes=(NodeConfig(name="srv",
+                          pool=PoolConfig(n_slots=8192, slot_size=2048),
+                          port=PortConfig(n_queues=1, ring_size=512,
+                                          writeback_threshold=1),
+                          stack=StackConfig(kind="bypass", burst_size=32)),),
+        n_clients=n_clients,
+        switch=SwitchConfig(egress_capacity=64,
+                            link=LinkConfig(gbps=link_gbps,
+                                            latency_ns=latency_ns)),
+        traffic=TrafficConfig(mode="open_loop", rate_gbps=2.0,
+                              duration_s=0.0002, packet_size=256,
+                              kind="poisson", seed=7, sim_time=True))
+
+
+FRAME = np.zeros(64, dtype=np.uint8)
+
+
+# -- direct invariant checks ---------------------------------------------------
+
+def test_bound_violation_raises():
+    san = PartitionSanitizer(latency_ns=1000)
+    # born at t=0, fires at 999 < 0 + 0 + 1000: impossible on a 1000ns link
+    with pytest.raises(CausalityError, match="conservative bound"):
+        san.check((0, 999, (0, 0, 0, 0), "deliver", FRAME))
+
+
+def test_bound_includes_serialization_term():
+    # 64B at 1 Gbps == 512 ns on the wire; latency 1000 → bound 1512
+    san = PartitionSanitizer(latency_ns=1000, gbps=1.0)
+    with pytest.raises(CausalityError, match="conservative bound"):
+        san.check((0, 1511, (0, 0, 0, 0), "deliver", FRAME))
+    san.check((0, 1512, (0, 0, 0, 0), "deliver", FRAME))  # exactly legal
+
+
+def test_fwd_payload_frame_length_is_used():
+    # fwd payload is (in_port, frame); the frame's length drives the bound
+    san = PartitionSanitizer(latency_ns=100, gbps=1.0)
+    with pytest.raises(CausalityError):
+        san.check((0, 200, (0, 0, 0, 0), "fwd", (3, FRAME)))
+    san.check((0, 612, (0, 0, 0, 0), "fwd", (3, FRAME)))
+
+
+def test_destination_clock_violation_raises():
+    san = PartitionSanitizer(latency_ns=10)
+    with pytest.raises(CausalityError, match="destination clock"):
+        san.check((0, 50, (0, 0, 0, 0), "deliver", FRAME), dst_clock_ns=60)
+
+
+def test_out_of_order_delivery_raises():
+    san = PartitionSanitizer(latency_ns=10)
+    san.check((0, 100, (50, 0, 0, 0), "deliver", FRAME))
+    # same destination, strictly smaller (fire_t, birth) key
+    with pytest.raises(CausalityError, match="out of order"):
+        san.check((0, 90, (40, 0, 0, 0), "deliver", FRAME))
+
+
+def test_order_is_tracked_per_destination():
+    san = PartitionSanitizer(latency_ns=10)
+    san.check((0, 100, (50, 0, 0, 0), "deliver", FRAME))
+    san.check((1, 90, (40, 0, 0, 0), "deliver", FRAME))  # other dst: fine
+    assert san.checked == 2
+
+
+# -- engine integration --------------------------------------------------------
+
+def test_engine_raises_on_injected_early_crossing():
+    """A crossing smuggled into the boundary stream with an impossible
+    (birth, fire_t) pair must kill the run, not corrupt it."""
+    cfg = _topology()
+    delta = cfg.switch.link.latency_ns
+    outbox = []
+    n_domains = cfg.n_clients + len(cfg.nodes) + 1
+    domains = [_build_domain(cfg, i, outbox) for i in range(n_domains)]
+    # born far in the virtual future yet firing at t=0: a causality race
+    outbox.append((0, 0, (10 ** 15, 0, 0, 0), "deliver", FRAME.copy()))
+    eng = PartitionEngine(domains, delta, outbox,
+                          sanitizer=PartitionSanitizer(
+                              delta, gbps=cfg.switch.link.gbps))
+    with pytest.raises(CausalityError):
+        eng.run()
+
+
+def test_engine_without_sanitizer_does_not_check():
+    cfg = _topology()
+    outbox = []
+    n_domains = cfg.n_clients + len(cfg.nodes) + 1
+    domains = [_build_domain(cfg, i, outbox) for i in range(n_domains)]
+    eng = PartitionEngine(domains, cfg.switch.link.latency_ns, outbox)
+    eng.run()  # legal run, no sanitizer: nothing raises
+    assert eng.n_windows > 0
+
+
+def test_parity_holds_with_sanitizer_enabled():
+    """The sanitizer observes, never perturbs: reports stay bit-identical to
+    the shared-clock loop and every crossing is checked."""
+    cfg = _topology()
+    base = run_topology_experiment(cfg).to_dict()
+    info = PartitionRunInfo()
+    got = run_partitioned_topology(
+        cfg.with_partition("partitioned", sanitize=True), info=info).to_dict()
+    assert info.mode_used == "partitioned", info.fallback_reason
+    assert info.n_sanitized > 0
+    assert got == base
+
+
+def test_mp_parity_with_env_flag(monkeypatch):
+    monkeypatch.setenv("REPRO_PARTITION_SANITIZE", "1")
+    cfg = _topology()
+    base = run_topology_experiment(cfg).to_dict()
+    info = PartitionRunInfo()
+    got = run_partitioned_topology(
+        cfg.with_partition("partitioned-mp", workers=2), info=info).to_dict()
+    assert info.mode_used == "partitioned-mp", info.fallback_reason
+    assert info.n_sanitized > 0
+    assert got == base
+
+
+def test_env_flag_off_values(monkeypatch):
+    from repro.exp.topology import _sanitize_enabled
+    cfg = _topology()
+    monkeypatch.delenv("REPRO_PARTITION_SANITIZE", raising=False)
+    assert not _sanitize_enabled(cfg)
+    monkeypatch.setenv("REPRO_PARTITION_SANITIZE", "0")
+    assert not _sanitize_enabled(cfg)
+    monkeypatch.setenv("REPRO_PARTITION_SANITIZE", "1")
+    assert _sanitize_enabled(cfg)
+
+
+# -- execution-only contract ---------------------------------------------------
+
+def test_sanitize_flag_is_execution_only():
+    """partition_sanitize must not perturb the config fingerprint (and so no
+    derived per-client seed), exactly like partition/partition_workers."""
+    cfg = _topology()
+    on = cfg.with_partition("partitioned", sanitize=True)
+    assert on.partition_sanitize is True
+    assert cfg.partition_sanitize is False
+    assert (config_fingerprint(cfg.to_dict())
+            == config_fingerprint(on.to_dict()))
+    # ...and it round-trips through to_dict/from_dict like any other field
+    assert TopologyConfig.from_dict(on.to_dict()) == on

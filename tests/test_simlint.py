@@ -1,0 +1,376 @@
+"""The determinism linter lints itself honestly (PR 9 tentpole tests).
+
+Per rule SL001–SL007: a known-bad snippet that must fire at the exact
+file:line, and a known-clean twin that must stay silent.  Plus the
+suppression-comment contract, the baseline workflow, and the CLI exit codes
+CI gates on.
+"""
+import json
+import textwrap
+
+from repro.simlint import (SimlintConfig, lint_source, load_baseline,
+                           split_new, write_baseline)
+from repro.simlint.cli import main
+
+CFG = SimlintConfig()
+
+
+def _lint(src, path="snippet.py", cfg=CFG):
+    return lint_source(path, textwrap.dedent(src), cfg)
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# -- SL001: wall-clock reads ---------------------------------------------------
+
+def test_sl001_fires_with_line():
+    fs = _lint("""\
+        import time
+
+        def f():
+            t0 = time.perf_counter()
+            return t0
+        """)
+    assert _rules(fs) == ["SL001"]
+    assert (fs[0].path, fs[0].line) == ("snippet.py", 4)
+    assert "time.perf_counter" in fs[0].message
+
+
+def test_sl001_sees_through_import_aliases():
+    fs = _lint("""\
+        from time import perf_counter as pc
+        t = pc()
+        """)
+    assert _rules(fs) == ["SL001"]
+    assert fs[0].line == 2
+
+
+def test_sl001_clean_twin_virtual_clock():
+    assert _lint("""\
+        def f(clock):
+            return clock.now_ns
+        """) == []
+
+
+def test_sl001_allow_glob():
+    cfg = SimlintConfig(sl001_allow=("bench/*.py",))
+    src = "import time\nt = time.time()\n"
+    assert lint_source("bench/timing.py", src, cfg) == []
+    assert _rules(lint_source("core/sim.py", src, cfg)) == ["SL001"]
+
+
+# -- SL002: unseeded RNG -------------------------------------------------------
+
+def test_sl002_global_numpy_and_argless_default_rng():
+    fs = _lint("""\
+        import numpy as np
+
+        x = np.random.rand(3)
+        rng = np.random.default_rng()
+        """)
+    assert _rules(fs) == ["SL002", "SL002"]
+    assert [f.line for f in fs] == [3, 4]
+
+
+def test_sl002_clean_twin_seeded():
+    assert _lint("""\
+        import numpy as np
+
+        rng = np.random.default_rng(7)
+        x = rng.normal(size=3)
+        ss = np.random.SeedSequence(42)
+        """) == []
+
+
+def test_sl002_stdlib_random():
+    fs = _lint("""\
+        import random
+
+        a = random.random()
+        b = random.Random()
+        c = random.SystemRandom(1)
+        """)
+    assert _rules(fs) == ["SL002", "SL002", "SL002"]
+    assert _lint("""\
+        import random
+        r = random.Random(42)
+        """) == []
+
+
+# -- SL003: set iteration near schedulers --------------------------------------
+
+def test_sl003_fires_only_in_scheduler_adjacent_files():
+    bad = """\
+        # ordering feeds the EventScheduler heap
+        for x in {3, 1, 2}:
+            print(x)
+        """
+    fs = _lint(bad)
+    assert _rules(fs) == ["SL003"]
+    assert fs[0].line == 2
+    # identical iteration, no scheduler token in the file: out of scope
+    assert _lint(bad.replace("EventScheduler", "nothing")) == []
+
+
+def test_sl003_set_typed_name_and_sorted_escape():
+    fs = _lint("""\
+        # DomainScheduler bookkeeping
+        live = set()
+        for t in live:
+            pass
+        for t in sorted(live):
+            pass
+        """)
+    assert _rules(fs) == ["SL003"]
+    assert fs[0].line == 3  # the sorted() iteration is deterministic
+
+
+# -- SL004: float accumulation into int64 counters -----------------------------
+
+def test_sl004_fires_on_floaty_rhs():
+    fs = _lint("""\
+        class Meter:
+            def add(self, n):
+                self.packets += n / 2
+        """)
+    assert _rules(fs) == ["SL004"]
+    assert fs[0].line == 3
+    assert ".packets" in fs[0].message
+
+
+def test_sl004_clean_twin_int_rhs_and_non_counter():
+    assert _lint("""\
+        class Meter:
+            def add(self, n):
+                self.packets += int(n)
+                self.mean_ns += n / 2
+        """) == []  # .mean_ns is not a declared int64 counter
+
+
+# -- SL005: config dataclass hygiene -------------------------------------------
+
+def test_sl005_unfrozen_config_dataclass():
+    fs = _lint("""\
+        from dataclasses import dataclass
+
+        @dataclass
+        class FooConfig:
+            a: int = 0
+        """)
+    assert _rules(fs) == ["SL005"]
+    assert fs[0].line == 4
+    assert "not frozen" in fs[0].message
+
+
+def test_sl005_mutable_default():
+    fs = _lint("""\
+        from dataclasses import dataclass
+
+        @dataclass(frozen=True)
+        class FooConfig:
+            xs: list = []
+        """)
+    assert _rules(fs) == ["SL005"]
+    assert fs[0].line == 5
+
+
+def test_sl005_clean_twin_and_scope():
+    assert _lint("""\
+        from dataclasses import dataclass, field
+
+        @dataclass(frozen=True)
+        class FooConfig:
+            a: int = 0
+            xs: tuple = field(default_factory=tuple)
+
+        @dataclass
+        class MutableState:
+            n: int = 0
+
+        class PlainConfig:
+            pass
+        """) == []  # non-Config dataclasses / non-dataclass Configs pass
+
+
+# -- SL006: to_dict/from_dict field coverage -----------------------------------
+
+def test_sl006_omitted_field_both_directions():
+    fs = _lint("""\
+        from dataclasses import dataclass
+
+        @dataclass(frozen=True)
+        class BarConfig:
+            a: int = 0
+            b: int = 1
+
+            def to_dict(self):
+                return {"a": self.a}
+
+            @classmethod
+            def from_dict(cls, d):
+                return cls(a=d["a"])
+        """)
+    assert _rules(fs) == ["SL006", "SL006"]
+    assert "to_dict omits field(s) b" in fs[0].message
+    assert fs[0].line == 8
+    assert "from_dict never passes field(s) b" in fs[1].message
+
+
+def test_sl006_one_sided_pair():
+    fs = _lint("""\
+        from dataclasses import dataclass
+
+        @dataclass(frozen=True)
+        class BazConfig:
+            a: int = 0
+
+            def to_dict(self):
+                return {"a": self.a}
+        """)
+    assert _rules(fs) == ["SL006"]
+    assert "without from_dict" in fs[0].message
+
+
+def test_sl006_clean_twins():
+    assert _lint("""\
+        from dataclasses import dataclass
+
+        @dataclass(frozen=True)
+        class OkConfig:
+            a: int = 0
+            b: int = 1
+
+            def to_dict(self):
+                return {"a": self.a, "b": self.b}
+
+            @classmethod
+            def from_dict(cls, d):
+                return cls(a=d["a"], b=d["b"])
+
+        @dataclass(frozen=True)
+        class GenericConfig:
+            a: int = 0
+
+            def to_dict(self):
+                return _config_to_dict(self)
+
+            @classmethod
+            def from_dict(cls, d):
+                return cls(**d)
+        """) == []  # explicit full coverage, and generic forms, both pass
+
+
+# -- SL007: process-identity ordering in mp paths ------------------------------
+
+def test_sl007_fires_only_with_mp_import():
+    bad = """\
+        import multiprocessing
+        import os
+
+        def worker(obj):
+            pid = os.getpid()
+            env = os.environ.get("X")
+            raw = os.environ["Y"]
+            return id(obj)
+        """
+    fs = _lint(bad)
+    assert _rules(fs) == ["SL007"] * 4
+    assert [f.line for f in fs] == [5, 6, 7, 8]
+    # same body, no mp import: a plain utility, out of scope
+    assert _lint(bad.replace("import multiprocessing", "import os")) == []
+
+
+# -- suppressions / syntax errors ----------------------------------------------
+
+def test_inline_suppression_is_rule_specific():
+    src = ("import time\n"
+           "t = time.time()  # simlint: disable=SL001 -- wall-mode timing\n")
+    assert lint_source("s.py", src, CFG) == []
+    wrong = src.replace("disable=SL001", "disable=SL002")
+    assert _rules(lint_source("s.py", wrong, CFG)) == ["SL001"]
+
+
+def test_syntax_error_is_a_finding_not_a_crash():
+    fs = lint_source("s.py", "def broken(:\n", CFG)
+    assert _rules(fs) == ["SL000"]
+
+
+# -- baseline workflow ---------------------------------------------------------
+
+def _tmp_repo(tmp_path, bad_lines):
+    (tmp_path / "simlint.toml").write_text(
+        '[simlint]\npaths = ["pkg"]\nbaseline = "simlint_baseline.json"\n')
+    pkg = tmp_path / "pkg"
+    pkg.mkdir()
+    (pkg / "mod.py").write_text("import time\n" + "\n".join(bad_lines) + "\n")
+    return tmp_path
+
+
+def test_baseline_absorbs_old_findings_and_gates_new(tmp_path):
+    repo = _tmp_repo(tmp_path, ["t0 = time.time()"])
+    toml = str(repo / "simlint.toml")
+    # accept the current state into the baseline, then the run is clean
+    assert main(["--config", toml, "--write-baseline"]) == 0
+    assert main(["--config", toml]) == 0
+    entries = json.loads((repo / "simlint_baseline.json").read_text())
+    assert [(e["rule"], e["text"]) for e in entries] \
+        == [("SL001", "t0 = time.time()")]
+    # a NEW violation gates even though the old one stays absorbed
+    (repo / "pkg" / "mod.py").write_text(
+        "import time\nt0 = time.time()\nt1 = time.monotonic()\n")
+    assert main(["--config", toml]) == 1
+
+
+def test_baseline_is_content_addressed_multiset(tmp_path):
+    repo = _tmp_repo(tmp_path, ["t0 = time.time()"])
+    cfg = SimlintConfig(paths=("pkg",), root=str(repo))
+    from repro.simlint import lint_paths
+    findings = lint_paths([str(repo / "pkg")], cfg)
+    bl_path = str(repo / "simlint_baseline.json")
+    write_baseline(bl_path, findings, root=str(repo))
+    # the same line moving to another line number stays baselined...
+    (repo / "pkg" / "mod.py").write_text(
+        "import time\n\n\nt0 = time.time()\n")
+    new, old = split_new(lint_paths([str(repo / "pkg")], cfg),
+                         load_baseline(bl_path), root=str(repo))
+    assert (len(new), len(old)) == (0, 1)
+    # ...but a DUPLICATE of a baselined line is a new finding (multiset)
+    (repo / "pkg" / "mod.py").write_text(
+        "import time\nt0 = time.time()\nt0 = time.time()\n")
+    new, old = split_new(lint_paths([str(repo / "pkg")], cfg),
+                         load_baseline(bl_path), root=str(repo))
+    assert (len(new), len(old)) == (1, 1)
+
+
+# -- CLI contract --------------------------------------------------------------
+
+def test_cli_exit_codes_and_report_format(tmp_path, capsys):
+    repo = _tmp_repo(tmp_path, ["t0 = time.time()"])
+    toml = str(repo / "simlint.toml")
+    assert main(["--config", toml, "--no-baseline"]) == 1
+    out = capsys.readouterr().out
+    assert "pkg/mod.py:2:6: SL001" in out
+    assert "hint:" in out
+    assert "1 new finding(s)" in out
+    # fix the violation (inline suppression with a reason) -> exit 0
+    (repo / "pkg" / "mod.py").write_text(
+        "import time\n"
+        "t0 = time.time()  # simlint: disable=SL001 -- bench timing\n")
+    assert main(["--config", toml, "--no-baseline"]) == 0
+    assert "clean" in capsys.readouterr().out
+
+
+def test_cli_list_rules(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in ("SL001", "SL002", "SL003", "SL004", "SL005", "SL006",
+                "SL007"):
+        assert rid in out
+
+
+def test_repo_is_clean_under_its_own_config():
+    """The acceptance gate, as a test: the repo's configured lint scope has
+    zero unsuppressed, unbaselined findings."""
+    assert main([]) == 0
