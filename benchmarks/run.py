@@ -38,9 +38,9 @@ def needs_csv_header(sections: Sequence[Section]) -> bool:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=["fig3a", "fig3b", "fig4", "incast", "serving",
-                             "latency", "kernels", "roofline", "fastpath",
-                             "parallel"])
+                    choices=["fig3a", "fig3b", "fig4", "incast", "aqm",
+                             "serving", "latency", "kernels", "roofline",
+                             "fastpath", "parallel"])
     # VIRTUAL seconds per MSB trial since the SimClock refactor: a few ms of
     # simulated traffic is statistically plenty and runs fast at any rate
     ap.add_argument("--trial-s", type=float, default=0.004)
@@ -72,8 +72,8 @@ def main() -> None:
         return
 
     from . import (fastpath_bench, fig3a_scalability, fig3b_sensitivity,
-                   fig4_dca_burst, fig_incast, fig_serving, kernels_bench,
-                   parallel_bench, roofline, tbl_latency)
+                   fig4_dca_burst, fig_aqm, fig_incast, fig_serving,
+                   kernels_bench, parallel_bench, roofline, tbl_latency)
     from .common import ROWS
 
     sections: List[Section] = [
@@ -82,6 +82,7 @@ def main() -> None:
         ("fig4", "csv", lambda: fig4_dca_burst.run(duration_s=args.trial_s)),
         ("incast", "csv",
          lambda: fig_incast.run(trial_s=min(args.trial_s, 0.001))),
+        ("aqm", "csv", lambda: fig_aqm.run(trial_s=min(args.trial_s, 0.005))),
         ("serving", "csv",
          lambda: fig_serving.run(trial_s=min(args.trial_s, 0.002))),
         ("latency", "csv", tbl_latency.run),

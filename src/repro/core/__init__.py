@@ -9,7 +9,8 @@ from .fastpath import (EPOCH_FALLBACK_REASONS, EpochRunInfo,
                        PARTITIONED_REASON, run_epoch_sim,
                        validate_epoch_fallback_reason)
 from .kernel_stack import KernelStackServer, KernelStats
-from .loadgen import LoadGen, TrafficPattern, find_max_sustainable_bandwidth
+from .loadgen import (DctcpRateController, LoadGen, TrafficPattern,
+                      find_max_sustainable_bandwidth)
 from .netstack import Lcore, NetworkStack, ServerStats
 from .packet import (
     DEFAULT_MTU,
@@ -21,12 +22,15 @@ from .packet import (
     PacketPool,
     PacketRef,
     checksum,
+    clear_ce,
     echo_payload_checksum,
     flow_bytes,
     flow_tuple_for_id,
     l2fwd_echo,
     l2fwd_echo_vec,
     payload_checksum,
+    read_ce,
+    read_ce_vec,
     read_dst_ip,
     read_flow,
     read_flow_bytes,
@@ -35,6 +39,8 @@ from .packet import (
     read_seqs_vec,
     read_stamp,
     read_stamps_vec,
+    set_ce,
+    set_ce_vec,
     stamp,
     swap_flow_ips,
     swap_flow_ips_vec,
@@ -53,7 +59,8 @@ from .partition import (PARTITION_FALLBACK_REASONS, CausalityError,
 from .pmd import BypassL2FwdServer, PipelineServer, Port
 from .rings import SpscRing
 from .simclock import EventScheduler, SimClock, Wire
-from .switch import Switch, SwitchPort
+from .switch import (AqmRed, Switch, SwitchPort, aqm_uniform_u64,
+                     red_probability)
 from .rss import DEFAULT_RSS_KEY, RssIndirection, toeplitz_hash, toeplitz_hash_vec
 from .telemetry import (LatencyRecorder, LatencyStats, QueueTelemetry,
                         RunReport, ThroughputMeter, rss_skew,
@@ -62,7 +69,9 @@ from .telemetry import (LatencyRecorder, LatencyStats, QueueTelemetry,
 __all__ = [
     "BypassDataplane", "BypassL2FwdServer", "BurstPlan", "CausalityError",
     "ClientDomain",
-    "Crossing", "DomainScheduler", "DomainSwitch", "EthConf", "EthDev",
+    "AqmRed", "Crossing", "DctcpRateController", "DomainScheduler",
+    "DomainSwitch", "EthConf",
+    "EthDev",
     "EPOCH_FALLBACK_REASONS", "EpochRunInfo",
     "EthDevError", "EthDevState", "EthStats", "EventScheduler", "FeedStats",
     "validate_epoch_fallback_reason", "validate_partition_fallback_reason",
@@ -75,17 +84,19 @@ __all__ = [
     "PipelineServer", "Port",
     "QueueTelemetry", "RssIndirection", "RunReport", "RxDescriptorRing",
     "ServerStats", "SimClock", "SpscRing", "Switch", "SwitchDomain",
-    "SwitchPort",
+    "SwitchPort", "aqm_uniform_u64", "red_probability",
     "ThroughputMeter", "TrafficPattern",
     "TxDescriptorRing", "Wire", "ZERO_COST",
     "assign_groups",
-    "checksum", "echo_payload_checksum", "find_max_sustainable_bandwidth",
+    "checksum", "clear_ce", "echo_payload_checksum",
+    "find_max_sustainable_bandwidth",
     "flow_bytes",
     "flow_tuple_for_id", "l2fwd_echo", "l2fwd_echo_vec", "make_feed",
-    "payload_checksum", "read_dst_ip", "read_flow",
+    "payload_checksum", "read_ce", "read_ce_vec", "read_dst_ip", "read_flow",
     "read_flow_bytes", "read_flow_bytes_vec", "read_seq", "read_stamp",
     "rss_skew",
-    "run_burst_experiment", "run_epoch_sim", "spin_ns", "stamp",
+    "run_burst_experiment", "run_epoch_sim", "set_ce", "set_ce_vec",
+    "spin_ns", "stamp",
     "swap_flow_ips",
     "swap_flow_ips_vec", "swap_macs",
     "toeplitz_hash", "toeplitz_hash_vec", "write_flow", "write_flow_ids_vec",

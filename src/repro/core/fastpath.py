@@ -88,6 +88,7 @@ EPOCH_FALLBACK_REASONS: Tuple[str, ...] = (
     "DCA accumulate mode",
     "pending queue accumulation deadlines",
     "integrity verification enabled",
+    "DCTCP rate-adaptive loadgen active",
     "pending scheduler events",
     "no ports",
     "server and loadgen port lists differ",
@@ -259,6 +260,10 @@ def _fallback_reason(lg, server, sched) -> Optional[str]:
         return "pending queue accumulation deadlines"
     if lg.verify_integrity:
         return "integrity verification enabled"
+    if getattr(lg, "cc", None) is not None:
+        # DCTCP adapts the offered rate mid-trial on echo feedback; the
+        # epoch planner precomputes the whole emission schedule up front
+        return "DCTCP rate-adaptive loadgen active"
     if sched is not None and len(sched) > 0:
         return "pending scheduler events"
     if not lg.ports:

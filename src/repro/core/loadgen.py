@@ -53,6 +53,8 @@ from .packet import (
     echo_payload_checksum,
     flow_tuple_for_id,
     payload_checksum,
+    read_ce,
+    read_ce_vec,
     read_seq,
     read_seqs_vec,
     read_stamp,
@@ -174,6 +176,10 @@ class _Flight:
     # pool-level ``alloc_failures`` (rx_nombuf) aggregates every consumer
     # of the pool, not the generator's own starvation.
     alloc_failures: int = 0
+    # completions whose frame came back with the ECN CE bit set (an AQM on
+    # the fabric marked instead of dropping); only surfaced in reports when
+    # nonzero or when a rate controller is attached
+    ce_marked: int = 0
     checksums: dict = field(default_factory=dict)
 
 
@@ -181,6 +187,173 @@ def _port_wire(port: Port) -> Wire:
     """One direction of the port's attached link (ideal if unconfigured)."""
     return Wire(gbps=getattr(port, "link_gbps", 0.0),
                 latency_ns=getattr(port, "link_latency_ns", 0))
+
+
+class DctcpRateController:
+    """DCTCP-style rate adaptation over virtual-time windows.
+
+    The hardware generator has no TCP stack, so congestion control is modeled
+    the way DCTCP's fluid model describes it: per *window* (a fixed slice of
+    virtual time, standing in for an RTT round) the controller measures the
+    fraction ``F`` of echoes that carried a CE mark — plus any sends old
+    enough that their echo is overdue, inferred lost — and keeps an EWMA
+
+        ``alpha <- (1 - g) * alpha + g * F``
+
+    A window with any marks/losses cuts the offered rate by ``alpha/2``
+    (DCTCP's proportional backoff); the ``k``-th consecutive clean window
+    grows it additively by ``k * increase_gbps`` (DCQCN-style fast
+    recovery: near the operating point marks are frequent, the clean run
+    stays short and steps stay small, while after a deep cut a long clean
+    run ramps the rate back in O(sqrt(deficit)) windows instead of
+    O(deficit)).  Multiplicative decrease with additive increase (AIMD)
+    is what makes competing clients converge toward a fair share — a
+    multiplicative increase would leave per-client rates wandering apart.
+    The rate is clamped to ``[min_gbps, max_gbps]`` where ``max_gbps`` is
+    the attachment link's line rate.
+
+    Everything is plain arithmetic on counters fed by the generator
+    (``on_send`` / ``on_ack``) — no RNG, no wall clock — so runs are
+    bit-identical per config + seed.  Loss inference is evidence-based: a
+    send is only written off once an echo for a *later* send has come back —
+    FIFO proof that the fabric already had its chance to deliver it (the
+    topology fabric is in-order per client path).  Batching stalls (NIC-side
+    writeback holding a whole in-order tail) therefore never masquerade as
+    congestion loss; the flip side is that losses at the very end of a run,
+    with no later echo to prove them, go uninferred — harmless, since there
+    is no window left to adapt.
+    """
+
+    __slots__ = ("rate_gbps", "window_ns", "gain", "min_gbps", "max_gbps",
+                 "increase_gbps", "max_inflight", "alpha", "window_end",
+                 "sent", "acked", "marked", "lost_accounted", "windows",
+                 "rate_min", "rate_max", "_acked_at_roll", "_marked_at_roll",
+                 "_hist", "_max_acked_sent", "_clean_run")
+
+    def __init__(self, rate_gbps: float, window_ns: int,
+                 gain: float = 0.0625, min_gbps: float = 0.05,
+                 max_gbps: float = float("inf"),
+                 increase_gbps: float = 0.25, max_inflight: int = 0,
+                 start_ns: int = 0):
+        if rate_gbps <= 0:
+            raise ValueError("rate_gbps must be > 0")
+        if window_ns < 1:
+            raise ValueError("window_ns must be >= 1")
+        if not (0.0 < gain <= 1.0):
+            raise ValueError("gain must be in (0, 1]")
+        if min_gbps <= 0 or min_gbps > max_gbps:
+            raise ValueError("need 0 < min_gbps <= max_gbps")
+        if increase_gbps <= 0.0:
+            raise ValueError("increase_gbps must be > 0")
+        if max_inflight < 0:
+            raise ValueError("max_inflight must be >= 0 (0 == uncapped)")
+        self.rate_gbps = min(max(rate_gbps, min_gbps), max_gbps)
+        self.window_ns = int(window_ns)
+        self.gain = gain
+        self.min_gbps = min_gbps
+        self.max_gbps = max_gbps
+        self.increase_gbps = increase_gbps
+        self.max_inflight = int(max_inflight)
+        # alpha starts saturated (as in the Linux DCTCP implementation):
+        # the first congested window then cuts the rate in half instead of
+        # waiting ~1/gain windows for the EWMA to warm up, which matters
+        # during an incast transient where every window is fully marked.
+        self.alpha = 1.0
+        self.window_end = int(start_ns) + self.window_ns
+        self.sent = 0
+        self.acked = 0
+        self.marked = 0
+        self.lost_accounted = 0
+        self.windows = 0
+        self.rate_min = self.rate_gbps
+        self.rate_max = self.rate_gbps
+        self._acked_at_roll = 0
+        self._marked_at_roll = 0
+        # (window boundary, cumulative sends with stamp < boundary) per roll,
+        # consumed left-to-right as echo evidence advances past boundaries
+        self._hist: deque = deque()
+        self._max_acked_sent = -1  # newest send stamp seen on any echo
+        self._clean_run = 0        # consecutive clean windows (fast recovery)
+
+    def _roll_to(self, t_ns: int) -> None:
+        while t_ns >= self.window_end:
+            delivered = self.acked - self._acked_at_roll
+            fresh_marked = self.marked - self._marked_at_roll
+            # FIFO-evidence loss inference: the newest send stamp seen on an
+            # echo proves every send from before that boundary is either
+            # delivered or gone; count the gone ones (once each)
+            hist = self._hist
+            while len(hist) > 1 and hist[1][0] <= self._max_acked_sent:
+                hist.popleft()
+            new_lost = 0
+            if hist and hist[0][0] <= self._max_acked_sent:
+                overdue = hist[0][1] - self.acked - self.lost_accounted
+                new_lost = overdue if overdue > 0 else 0
+            self.lost_accounted += new_lost
+            denom = delivered + new_lost
+            if denom > 0:
+                frac = (fresh_marked + new_lost) / denom
+                self.alpha = (1.0 - self.gain) * self.alpha + self.gain * frac
+                if frac > 0.0:
+                    self.rate_gbps *= 1.0 - self.alpha / 2.0
+                    self._clean_run = 0
+                else:
+                    self._clean_run += 1
+                    self.rate_gbps += self.increase_gbps * self._clean_run
+                if self.rate_gbps < self.min_gbps:
+                    self.rate_gbps = self.min_gbps
+                elif self.rate_gbps > self.max_gbps:
+                    self.rate_gbps = self.max_gbps
+                if self.rate_gbps < self.rate_min:
+                    self.rate_min = self.rate_gbps
+                elif self.rate_gbps > self.rate_max:
+                    self.rate_max = self.rate_gbps
+                self.windows += 1
+            self._acked_at_roll = self.acked
+            self._marked_at_roll = self.marked
+            hist.append((self.window_end, self.sent))
+            if len(hist) > 4096:   # bound memory under pathological stalls
+                hist.popleft()
+            self.window_end += self.window_ns
+
+    def on_send(self, t_ns: int) -> None:
+        self._roll_to(int(t_ns))
+        self.sent += 1
+
+    def on_ack(self, t_ns: int, ce: bool,
+               sent_ns: Optional[int] = None) -> None:
+        self._roll_to(int(t_ns))
+        self.acked += 1
+        if ce:
+            self.marked += 1
+        if sent_ns is not None and int(sent_ns) > self._max_acked_sent:
+            self._max_acked_sent = int(sent_ns)
+
+    def on_acks(self, t_ns: int, n: int, n_marked: int,
+                max_sent_ns: Optional[int] = None) -> None:
+        self._roll_to(int(t_ns))
+        self.acked += int(n)
+        self.marked += int(n_marked)
+        if max_sent_ns is not None and int(max_sent_ns) > self._max_acked_sent:
+            self._max_acked_sent = int(max_sent_ns)
+
+    @property
+    def outstanding(self) -> int:
+        """Sends neither echoed back nor written off as lost."""
+        return self.sent - self.acked - self.lost_accounted
+
+    def can_send(self) -> bool:
+        """Self-clocking guard (TX-credit / cwnd analogue): with
+        ``max_inflight`` set, refuse new sends while that many frames are
+        outstanding.  Pure rate pacing keeps integrating overshoot into the
+        bottleneck queue for a full feedback delay; the in-flight cap is
+        the ack-clocked backpressure that stops it instantly, the way a
+        TCP sender can never exceed its window."""
+        return self.max_inflight <= 0 or self.outstanding < self.max_inflight
+
+    def gap_ns(self, size_bytes: int) -> float:
+        """Inter-emission gap (ns) at the current rate for one frame."""
+        return size_bytes * 8.0 / self.rate_gbps
 
 
 class LoadGen:
@@ -222,6 +395,14 @@ class LoadGen:
         self.meter = ThroughputMeter()
         self.flight = _Flight()
         self._next_seq = 0
+        # optional DCTCP-style rate controller (attach_cc); when set,
+        # run_sim generates its emission schedule incrementally and every
+        # completion feeds the controller its CE bit
+        self.cc: Optional[DctcpRateController] = None
+
+    def attach_cc(self, cc: DctcpRateController) -> None:
+        """Attach a rate controller; subsequent sends/completions feed it."""
+        self.cc = cc
 
     # -- wire-side primitives ------------------------------------------------
     def _write_frame(self, pool: PacketPool, slot: int, size: int,
@@ -300,6 +481,11 @@ class LoadGen:
             self.latency.record_many(rtts)
             self.meter.merge_counts(n, int(lengths.sum()), t0, t1)
             self.flight.received += n
+            if self.cc is not None:
+                n_marked = int(read_ce_vec(port.pool, slots).sum())
+                self.flight.ce_marked += n_marked
+                self.cc.on_acks(t1, n, n_marked,
+                                max_sent_ns=int(stamps.max()))
             port.pool.free_burst([int(s) for s in slots])
             return n
         done = port.drain_tx(self.max_tx_burst)
@@ -316,6 +502,11 @@ class LoadGen:
             if want is not None and payload_checksum(buf, self.ts_offset) != want:
                 self.flight.integrity_errors += 1
             self.flight.received += 1
+            if self.cc is not None:
+                ce = read_ce(buf)
+                if ce:
+                    self.flight.ce_marked += 1
+                self.cc.on_ack(rx_ns, ce, sent_ns=sent_ns)
             port.pool.free(slot)
         return len(done)
 
@@ -336,6 +527,10 @@ class LoadGen:
         is out of buffers."""
         slot = pool.alloc()
         self.flight.sent += 1
+        if self.cc is not None:
+            # alloc failures still count: a starved generator is offered
+            # load that will never echo, which the controller must see
+            self.cc.on_send(int(stamp_ns))
         if slot is None:
             self.flight.alloc_failures += 1
             return None
@@ -360,6 +555,11 @@ class LoadGen:
             want = self.flight.checksums.pop(read_seq(frame), None)
             if want is not None and echo_payload_checksum(frame) != want:
                 self.flight.integrity_errors += 1
+        ce = read_ce(frame)
+        if ce:
+            self.flight.ce_marked += 1
+        if self.cc is not None:
+            self.cc.on_ack(int(now_ns), ce, sent_ns=sent_ns)
         self.flight.received += 1
 
     # -- closed-loop (deterministic, for tests) -------------------------------
@@ -447,13 +647,27 @@ class LoadGen:
                          None)
         rng = np.random.default_rng(pattern.seed)
         use_rng_payload = self.verify_integrity
-        times, sizes = pattern.emission_schedule(int(duration_s * 1e9), rng)
         start = clock.now_ns
-        if len(times):
-            times = times + start
-            # anchor throughput at the first emission so a terminal
-            # writeback-flush drain can't shrink the measurement window
-            self.meter.open_window(int(times[0]))
+        cc = self.cc
+        cc_next: Optional[float] = None
+        cc_end = start + int(duration_s * 1e9)
+        if cc is not None:
+            # rate-adaptive mode: each emission gap depends on the
+            # controller's rate *at that moment*, so the schedule is
+            # generated incrementally instead of precomputed
+            times = np.empty(0, dtype=np.int64)
+            sizes = np.empty(0, dtype=np.int32)
+            if pattern.packets_per_second() > 0 and cc_end > start:
+                cc_next = float(start)
+                self.meter.open_window(start)
+        else:
+            times, sizes = pattern.emission_schedule(int(duration_s * 1e9),
+                                                     rng)
+            if len(times):
+                times = times + start
+                # anchor throughput at the first emission so a terminal
+                # writeback-flush drain can't shrink the measurement window
+                self.meter.open_window(int(times[0]))
         nports = len(self.ports)
         fwd = [_port_wire(p) for p in self.ports]
         back = [_port_wire(p) for p in self.ports]
@@ -485,6 +699,30 @@ class LoadGen:
                     self.flight.alloc_failures += 1
                 i += 1
                 moved += 1
+            # 1b) rate-adaptive emissions: same body, but the next emission
+            #     time is minted per frame from the controller's current rate
+            while cc_next is not None and int(cc_next) <= now:
+                t_emit = int(cc_next)
+                size = pattern.packet_size
+                # a tick finding the in-flight cap exhausted is forfeited
+                # (paced probing); the cursor still advances
+                if cc.can_send():
+                    port = self.ports[i % nports]
+                    slot = port.pool.alloc()
+                    self.flight.sent += 1
+                    cc.on_send(t_emit)
+                    if slot is not None:
+                        self._write_frame(port.pool, slot, size, t_emit,
+                                          rng if use_rng_payload else None)
+                        arrival = fwd[i % nports].transmit(t_emit, size)
+                        on_wire[i % nports].append((arrival, slot, size))
+                    else:
+                        self.flight.alloc_failures += 1
+                    i += 1
+                moved += 1
+                cc_next += cc.gap_ns(size)
+                if cc_next >= cc_end:
+                    cc_next = None
             # 2) wire arrivals due: NIC-side delivery (RSS steering; ring
             #    overflow drops here, exactly like hardware)
             for pi, dq in enumerate(on_wire):
@@ -510,6 +748,8 @@ class LoadGen:
             cands = []
             if i < n:
                 cands.append(int(times[i]))
+            if cc_next is not None:
+                cands.append(int(cc_next))
             for dq in on_wire:
                 if dq:
                     cands.append(dq[0][0])
@@ -620,6 +860,18 @@ class LoadGen:
         rep.extras["integrity_errors"] = float(self.flight.integrity_errors)
         # generator buffer starvation (offered load that never hit a wire)
         rep.extras["loadgen_alloc_failures"] = float(self.flight.alloc_failures)
+        # ECN / congestion-control telemetry, only when the fabric actually
+        # marked something or a controller is attached (keeps pre-AQM
+        # reports byte-identical)
+        if self.flight.ce_marked or self.cc is not None:
+            rep.extras["ce_marked"] = float(self.flight.ce_marked)
+        if self.cc is not None:
+            rep.extras["cc_windows"] = float(self.cc.windows)
+            rep.extras["cc_final_rate_gbps"] = self.cc.rate_gbps
+            rep.extras["cc_min_rate_gbps"] = self.cc.rate_min
+            rep.extras["cc_max_rate_gbps"] = self.cc.rate_max
+            rep.extras["cc_alpha"] = self.cc.alpha
+            rep.extras["cc_lost_inferred"] = float(self.cc.lost_accounted)
         # per-RX-ring descriptor-writeback telemetry (the Fig. 4 observable)
         rep.extras.update(writeback_extras(self.ports))
         # per-queue NIC-side accounting (the RSS-skew observable); only

@@ -10,7 +10,8 @@ Wire layout (offsets in bytes), loosely Ethernet-shaped:
 
     0..5    dst "mac"
     6..11   src "mac"
-    12..13  ethertype (we use 0x88B5, local experimental)
+    12..13  ethertype (we use 0x88B5, local experimental; bit 0 of byte 12
+            doubles as the ECN CE mark — see ``set_ce``/``read_ce``)
     14..21  u64 sequence number (little endian)
     22..29  u64 transmit timestamp in ns (the EtherLoadGen stamp; offset is
             configurable per the paper — "adds a timestamp to each outgoing
@@ -36,6 +37,15 @@ FLOW_SIZE = 12  # src_ip(4) + dst_ip(4) + src_port(2) + dst_port(2), big endian
 MIN_FRAME = 64
 DEFAULT_MTU = 1518
 ETHERTYPE = 0x88B5
+
+# ECN congestion-experienced mark: bit 0 of the ethertype high byte (0x88 is
+# even, so the bit is born clear).  The location is deliberate — outside the
+# seq/ts/flow fields the loadgen and echo servers rewrite, untouched by
+# ``swap_macs(_vec)``/``swap_flow_ips(_vec)``, and excluded from both
+# ``payload_checksum`` and ``echo_payload_checksum`` — so a switch-applied
+# mark survives the full echo round-trip back to the client that sent it.
+CE_OFFSET = 12
+CE_MASK = 0x01
 
 
 def _u64_to_bytes(value: int) -> np.ndarray:
@@ -144,6 +154,20 @@ def read_seq(buf: np.ndarray) -> int:
 
 def write_seq(buf: np.ndarray, seq: int) -> None:
     buf[SEQ_OFFSET : SEQ_OFFSET + 8] = _u64_to_bytes(seq)
+
+
+def set_ce(buf: np.ndarray) -> None:
+    """Mark a frame congestion-experienced (the ECN-marking switch op)."""
+    buf[CE_OFFSET] |= CE_MASK
+
+
+def clear_ce(buf: np.ndarray) -> None:
+    buf[CE_OFFSET] &= 0xFF ^ CE_MASK
+
+
+def read_ce(buf: np.ndarray) -> bool:
+    """True iff the frame carries the congestion-experienced mark."""
+    return bool(buf[CE_OFFSET] & CE_MASK)
 
 
 def swap_macs(buf: np.ndarray) -> None:
@@ -326,6 +350,16 @@ def read_flow_bytes(pool: PacketPool, slot: int) -> np.ndarray:
     delivery hot path (:meth:`repro.core.pmd.Port.deliver`) needs.
     """
     return pool.arena[slot, FLOW_OFFSET : FLOW_OFFSET + FLOW_SIZE]
+
+
+def set_ce_vec(pool: PacketPool, slots: np.ndarray) -> None:
+    """Burst variant of :func:`set_ce`."""
+    pool.arena[slots, CE_OFFSET] |= CE_MASK
+
+
+def read_ce_vec(pool: PacketPool, slots: np.ndarray) -> np.ndarray:
+    """Burst variant of :func:`read_ce` — boolean array over the burst."""
+    return (pool.arena[slots, CE_OFFSET] & CE_MASK) != 0
 
 
 def swap_macs_vec(pool: PacketPool, slots: np.ndarray,

@@ -44,7 +44,6 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .packet import read_dst_ip
 from .simclock import SimClock, Wire
 from .switch import Switch
 from .telemetry import writeback_extras
@@ -80,6 +79,9 @@ PARTITION_FALLBACK_REASONS: Tuple[str, ...] = (
     r"node .+: zero-cost kernel model needs the shared loop's "
     r"every-round polling",
     r"node .+: stack kind .+ not proven partition-equivalent",
+    r"AQM policy .+ not proven partition-equivalent",
+    r"DCTCP rate-adaptive clients adapt on cross-domain echo feedback",
+    r"multi-switch trunk fabric not proven partition-equivalent",
 )
 
 _PARTITION_REASON_RES = tuple(re.compile(p) for p in
@@ -323,11 +325,12 @@ class DomainSwitch(Switch):
     Endpoints no longer call :meth:`send` — each endpoint domain owns its
     port's uplink :class:`~repro.core.simclock.Wire` (only that endpoint ever
     transmits on it, so the FIFO arithmetic is unchanged) and emits a ``fwd``
-    crossing instead.  ``_forward`` runs here with identical route/occupancy/
-    drop logic, but delivery becomes a ``deliver`` crossing to the egress
-    port's owner domain; tx counters are charged at crossing mint time (the
-    shared loop charges them at delivery, and nothing reads them before the
-    final report, so end state is identical).
+    crossing instead.  The forward pipeline (classify -> route -> AQM ->
+    enqueue) is inherited verbatim from :class:`~repro.core.switch.Switch`;
+    only the emission stage differs — delivery becomes a ``deliver`` crossing
+    to the egress port's owner domain.  Tx counters are charged at crossing
+    mint time (the shared loop charges them at delivery, and nothing reads
+    them before the final report, so end state is identical).
     """
 
     def __init__(self, n_ports: int, sched: DomainScheduler, gbps: float,
@@ -344,27 +347,10 @@ class DomainSwitch(Switch):
             "partitioned fabric: endpoints transmit on their own uplink "
             "wires (ClientDomain/NodeDomain emit crossings), not Switch.send")
 
-    def _forward(self, in_port_id: int, frame: np.ndarray) -> None:
-        self.ports[in_port_id].rx_frames += 1
-        out_id = self.lookup(read_dst_ip(frame))
-        if out_id is None:
-            self.unrouted += 1
-            return
-        out = self.ports[out_id]
-        if out.occupancy >= out.capacity:
-            out.egress_drops += 1
-            return
-        out.occupancy += 1
-        out.occ_high = max(out.occ_high, out.occupancy)
-        out.egress_enqueued += 1
-        nbytes = len(frame)
-        now = self.sched.clock.now_ns
-        arrival = out.egress.transmit(now, nbytes)
-        ser_end = arrival - out.egress.latency_ns
-        self.sched.schedule_at(ser_end, lambda: self._egress_done(out))
+    def _emit(self, out, frame: np.ndarray, arrival: int) -> None:
         out.tx_frames += 1
-        out.tx_bytes += nbytes
-        self._outbox.append((self._domain_of_port[out_id], arrival,
+        out.tx_bytes += len(frame)
+        self._outbox.append((self._domain_of_port[out.port_id], arrival,
                              self.sched.mint_birth(), "deliver", frame))
 
 
@@ -687,6 +673,51 @@ class PartitionEngine:
 
 # -- multiprocessing mode -----------------------------------------------------
 
+def _pack_crossings(crossings: List[Crossing]) -> Tuple[list, bytes]:
+    """Flatten crossings into (metadata list, one contiguous frame buffer).
+
+    Pickling a window's crossings naively costs one ndarray reduction per
+    frame; a 64-frame window is 64 small pickle objects each way.  Packed,
+    the same window is one metadata list (ints, birth tuples, kinds) plus a
+    single bytes blob every frame is concatenated into — one pickled list
+    per (worker, window) message regardless of crossing count.  A payload
+    that isn't a plain frame (or ``(port, frame)``) rides in the metadata
+    row unpacked, so exotic crossings stay correct, just unoptimized.
+    """
+    metas: list = []
+    buf = bytearray()
+    for dst, fire, birth, kind, payload in crossings:
+        if kind == "fwd":
+            port, frame = payload
+        else:
+            port, frame = -1, payload
+        if not (isinstance(frame, np.ndarray) and frame.dtype == np.uint8
+                and frame.ndim == 1):
+            metas.append((dst, fire, birth, kind, None, payload))
+            continue
+        off = len(buf)
+        buf += frame.tobytes()
+        metas.append((dst, fire, birth, kind, port, (off, len(frame))))
+    return metas, bytes(buf)
+
+
+def _unpack_crossings(metas: list, buf: bytes) -> List[Crossing]:
+    """Inverse of :func:`_pack_crossings`.  Frames come back as writable
+    disjoint views over one private copy of the buffer (the switch's ECN
+    stage writes the CE bit in place), byte-identical to what was packed."""
+    arr = np.frombuffer(bytearray(buf), dtype=np.uint8)
+    out: List[Crossing] = []
+    for dst, fire, birth, kind, port, span in metas:
+        if port is None:
+            out.append((dst, fire, birth, kind, span))
+            continue
+        off, ln = span
+        frame = arr[off:off + ln]
+        payload = (port, frame) if kind == "fwd" else frame
+        out.append((dst, fire, birth, kind, payload))
+    return out
+
+
 def _mp_worker_main(conn, builder: Tuple[str, str], cfg_dict: dict,
                     ids: List[int]) -> None:
     """One worker: builds its subset of domains (via the exp-layer builder
@@ -709,13 +740,13 @@ def _mp_worker_main(conn, builder: Tuple[str, str], cfg_dict: dict,
             msg = conn.recv()
             op = msg[0]
             if op == "window":
-                _op, w_end, due = msg
-                for c in due:
+                _op, w_end, metas, buf = msg
+                for c in _unpack_crossings(metas, buf):
                     domains[c[0]].accept(c)
                 moved = 0
                 for i in order:
                     moved += domains[i].run_window(w_end)
-                out = list(outbox)
+                out = _pack_crossings(outbox)
                 outbox.clear()
                 conn.send(("done", moved, out) + state())
             elif op == "flush":
@@ -730,7 +761,7 @@ def _mp_worker_main(conn, builder: Tuple[str, str], cfg_dict: dict,
                     d = domains[i]
                     if d.kind == "node":
                         moved += d.round_at(t_flush)
-                out = list(outbox)
+                out = _pack_crossings(outbox)
                 outbox.clear()
                 conn.send(("done", moved, out) + state())
             elif op == "report":
@@ -752,9 +783,12 @@ class MpPartitionEngine:
     """The window loop of :class:`PartitionEngine`, with domain groups living
     in worker processes (mode ``partitioned-mp``).  The coordinator only
     routes candidates and crossings; all simulation state stays worker-local,
-    so per-window IPC is O(crossings), not O(state).  Determinism: crossings
-    are delivered sorted by (fire_t, birth) and every heap orders on the same
-    key, so worker scheduling cannot reorder anything observable."""
+    so per-window IPC is O(crossings), not O(state) — and crossings travel
+    packed (:func:`_pack_crossings`): one metadata list plus one contiguous
+    frame buffer per (worker, window) message instead of one pickled ndarray
+    per frame.  Determinism: crossings are delivered sorted by
+    (fire_t, birth) and every heap orders on the same key, so worker
+    scheduling cannot reorder anything observable."""
 
     def __init__(self, cfg_dict: dict, builder: Tuple[str, str],
                  n_domains: int, delta: int, n_workers: int,
@@ -833,12 +867,12 @@ class MpPartitionEngine:
                         for i in self._owner[wi])
                     if not busy:
                         continue  # whole window is a no-op for this worker
-                    conn.send(("window", w_end, mine))
+                    conn.send(("window", w_end) + _pack_crossings(mine))
                     active.append(conn)
                 for conn in active:
                     _tag, moved, out, wc, wk = self._recv(conn, "done")
                     rounds += moved
-                    pending.extend(out)
+                    pending.extend(_unpack_crossings(*out))
                     cands.update(wc)
                     clocks.update(wk)
                 self.n_windows += 1
@@ -854,7 +888,7 @@ class MpPartitionEngine:
                 for conn in self._conns:
                     _tag, moved, out, wc, wk = self._recv(conn, "done")
                     rounds += moved
-                    pending.extend(out)
+                    pending.extend(_unpack_crossings(*out))
                     cands.update(wc)
                     clocks.update(wk)
                 flushed_idle = True

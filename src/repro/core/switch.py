@@ -13,17 +13,27 @@ Model (per port):
   at ``t`` pays serialization + propagation on its port's uplink
   (:class:`~repro.core.simclock.Wire` FIFO semantics) before it reaches the
   forwarding logic.
-* **forwarding** — on arrival the switch reads the frame's destination
-  address (the flow dst_ip the load generator writes and RSS hashes —
-  :func:`~repro.core.packet.read_dst_ip`) and looks it up in a
-  longest-prefix-match route table.  Unroutable frames are dropped and
-  counted.
+* **forwarding pipeline** — on arrival the frame runs a P4sim-style pipeline
+  of composable per-port stages: **classify** (parse the header, extract the
+  match key — the flow dst_ip the load generator writes and RSS hashes,
+  :func:`~repro.core.packet.read_dst_ip`), **route** (longest-prefix-match
+  table lookup; unroutable frames are dropped and counted), **AQM** (the
+  egress port's queue-management policy decides pass/early-drop/CE-mark —
+  see :class:`AqmRed`), and **enqueue** (the bounded egress buffer below).
 * **egress queue** — each egress port owns a bounded drop-tail buffer in
   front of its egress wire.  A frame enqueues if fewer than ``capacity``
   frames are queued-or-serializing, serializes FIFO at the wire's rate, and
   lands at the endpoint ``latency_ns`` later; otherwise it is **dropped at
   the switch** — the loss mechanism of every incast workload, distinct from
   NIC-side ring overflow (``imissed``) and pool exhaustion (``rx_nombuf``).
+
+The AQM stage is pluggable per port (:meth:`Switch.set_aqm`): the default is
+the drop-tail behavior above (no policy object, no extra arithmetic — runs
+bit-identically to the pre-pipeline switch), ``red`` drops probabilistically
+before the buffer fills, and ``ecn`` applies the same RED curve as a CE mark
+(:func:`~repro.core.packet.set_ce`) instead of a drop.  RED randomness comes
+from a counter-seeded splitmix64 stream per (seed, port, decision) — fully
+deterministic, no wall-clock or global RNG state (simlint SL002).
 
 Frames on the fabric are raw byte arrays (copies), never pool slots: each
 node owns a private :class:`~repro.core.packet.PacketPool`, exactly like
@@ -43,12 +53,109 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .packet import read_dst_ip
+from .packet import read_dst_ip, set_ce
 from .simclock import EventScheduler, Wire
 
 # an endpoint's delivery sink: (frame bytes, arrival time in virtual ns).
 # The scheduler has already advanced the clock to the arrival time.
 Sink = Callable[[np.ndarray, int], None]
+
+# AQM stage verdicts
+AQM_PASS = 0
+AQM_DROP = 1
+AQM_MARK = 2
+
+_M64 = (1 << 64) - 1
+
+
+def _splitmix64(x: int) -> int:
+    """One splitmix64 output step — the deterministic per-decision uniform."""
+    x = (x + 0x9E3779B97F4A7C15) & _M64
+    z = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+    return z ^ (z >> 31)
+
+
+def aqm_uniform_u64(seed: int, port_id: int, counter: int) -> int:
+    """The k-th uniform u64 of port ``port_id``'s AQM decision stream.
+
+    Counter-seeded (seed, port, decision index) -> u64: replayable from
+    counters alone, so partitioned replicas of a switch draw the identical
+    stream — no shared-RNG state to keep in sync.
+    """
+    x = _splitmix64((int(seed) & _M64) ^ 0xD1B54A32D192ED03)
+    x = _splitmix64(x ^ ((int(port_id) & _M64) * 0x9E3779B97F4A7C15 & _M64))
+    return _splitmix64(x ^ (int(counter) & _M64))
+
+
+def red_probability(depth: int, min_thresh: int, max_thresh: int,
+                    max_p: float) -> float:
+    """Classic RED curve on instantaneous queue depth (frames).
+
+    0 below ``min_thresh``; linear ramp to ``max_p`` across the threshold
+    band; certain (1.0) at or above ``max_thresh``.  Monotone non-decreasing
+    in ``depth`` for any valid thresholds (min <= max) — the property the
+    hypothesis suite pins.
+    """
+    if depth >= max_thresh:
+        return 1.0
+    if depth < min_thresh:
+        return 0.0
+    return max_p * (depth - min_thresh) / float(max_thresh - min_thresh)
+
+
+class AqmRed:
+    """RED-family AQM policy for one egress port: early-drop or CE-mark.
+
+    ``kind`` selects the action taken when the RED curve fires: ``"red"``
+    drops the arriving frame before it occupies a buffer slot; ``"ecn"``
+    sets the CE bit and lets the frame through (the DCTCP fabric half).
+    Decisions observe the arriving-frame-inclusive depth (``occupancy + 1``,
+    DCTCP's mark-on-enqueue convention) and sample the port's occupancy
+    high-water at decision time — so a port whose policy refuses frames at
+    depth k still records the demand that reached it (the enqueue-only
+    sampling bug this stage fixes).
+    """
+
+    __slots__ = ("kind", "min_thresh", "max_thresh", "max_p", "seed",
+                 "decisions", "ecn_marked", "early_drops")
+
+    def __init__(self, kind: str, min_thresh: int, max_thresh: int,
+                 max_p: float, seed: int):
+        if kind not in ("red", "ecn"):
+            raise ValueError(f"unknown AQM kind {kind!r}")
+        if not 1 <= min_thresh <= max_thresh:
+            raise ValueError("need 1 <= min_thresh <= max_thresh")
+        if not 0.0 < max_p <= 1.0:
+            raise ValueError("max_p must be in (0, 1]")
+        self.kind = kind
+        self.min_thresh = int(min_thresh)
+        self.max_thresh = int(max_thresh)
+        self.max_p = float(max_p)
+        self.seed = int(seed)
+        self.decisions = 0          # the per-port RNG counter
+        self.ecn_marked = 0
+        self.early_drops = 0
+
+    def decide(self, port: "SwitchPort") -> int:
+        depth = port.occupancy + 1
+        # satellite fix: record demand when the policy looks, not only on
+        # enqueue — a RED drop at depth k must leave occ_high >= k
+        if depth > port.occ_high:
+            port.occ_high = depth
+        k = self.decisions
+        self.decisions += 1
+        p = red_probability(depth, self.min_thresh, self.max_thresh,
+                            self.max_p)
+        if p <= 0.0:
+            return AQM_PASS
+        if aqm_uniform_u64(self.seed, port.port_id, k) >= int(p * 2.0 ** 64):
+            return AQM_PASS
+        if self.kind == "ecn":
+            self.ecn_marked += 1
+            return AQM_MARK
+        self.early_drops += 1
+        return AQM_DROP
 
 
 class SwitchPort:
@@ -56,7 +163,7 @@ class SwitchPort:
 
     __slots__ = ("port_id", "ingress", "egress", "capacity", "sink",
                  "occupancy", "occ_high", "rx_frames", "tx_frames",
-                 "tx_bytes", "egress_enqueued", "egress_drops")
+                 "tx_bytes", "egress_enqueued", "egress_drops", "aqm")
 
     def __init__(self, port_id: int, gbps: float, latency_ns: int,
                  capacity: int):
@@ -75,6 +182,7 @@ class SwitchPort:
         self.tx_bytes = 0
         self.egress_enqueued = 0
         self.egress_drops = 0       # drop-tail: egress buffer full
+        self.aqm: Optional[AqmRed] = None   # None == plain drop-tail stage
 
 
 class Switch:
@@ -109,6 +217,10 @@ class Switch:
     def attach(self, port_id: int, sink: Sink) -> None:
         """Wire an endpoint's delivery sink to a port."""
         self.ports[port_id].sink = sink
+
+    def set_aqm(self, port_id: int, aqm: Optional[AqmRed]) -> None:
+        """Install (or clear) the AQM stage policy on one egress port."""
+        self.ports[port_id].aqm = aqm
 
     def add_route(self, dst_ip: int, port_id: int, prefix_len: int = 32) -> None:
         """Route ``dst_ip/prefix_len`` out of ``port_id`` (LPM on lookup)."""
@@ -147,13 +259,44 @@ class Switch:
         self.sched.schedule_at(arrival, lambda: self._forward(port_id, frame))
 
     def _forward(self, in_port_id: int, frame: np.ndarray) -> None:
-        """Ingress arrival: route on the frame's dst address, enqueue egress."""
-        self.ports[in_port_id].rx_frames += 1
-        out_id = self.lookup(read_dst_ip(frame))
+        """Ingress arrival: run the per-port pipeline — classify -> route ->
+        AQM -> enqueue.  Stages are methods so a subclass (the partitioned
+        :class:`~repro.core.partition.DomainSwitch`) can replace exactly one
+        (egress emission) without forking the forward path."""
+        key = self._classify(in_port_id, frame)
+        out_id = self._route(key)
         if out_id is None:
             self.unrouted += 1
             return
         out = self.ports[out_id]
+        verdict = self._aqm_decide(out)
+        if verdict == AQM_DROP:
+            return
+        if verdict == AQM_MARK:
+            set_ce(frame)
+        self._enqueue(out, frame)
+
+    # -- pipeline stages ------------------------------------------------------
+    def _classify(self, in_port_id: int, frame: np.ndarray) -> int:
+        """Parse stage: count the ingress arrival, extract the match key."""
+        self.ports[in_port_id].rx_frames += 1
+        return read_dst_ip(frame)
+
+    def _route(self, dst_ip: int) -> Optional[int]:
+        """Match stage: LPM table lookup (None == unroutable)."""
+        return self.lookup(dst_ip)
+
+    def _aqm_decide(self, out: SwitchPort) -> int:
+        """AQM stage: the egress port's policy votes on the arriving frame.
+        No policy installed == drop-tail: pass with zero extra arithmetic,
+        so default configs run bit-identically to the pre-pipeline switch."""
+        if out.aqm is None:
+            return AQM_PASS
+        return out.aqm.decide(out)
+
+    def _enqueue(self, out: SwitchPort, frame: np.ndarray) -> None:
+        """Enqueue stage: bounded drop-tail buffer in front of the egress
+        wire, then emission (two scheduler events per frame)."""
         if out.occupancy >= out.capacity:
             out.egress_drops += 1   # drop-tail: the incast loss mechanism
             return
@@ -167,7 +310,14 @@ class Switch:
         # the buffer slot frees when serialization completes (the frame has
         # left the switch), not when the frame lands after propagation
         self.sched.schedule_at(ser_end, lambda: self._egress_done(out))
-        self.sched.schedule_at(arrival, lambda: self._deliver(out, frame, arrival))
+        self._emit(out, frame, arrival)
+
+    def _emit(self, out: SwitchPort, frame: np.ndarray, arrival: int) -> None:
+        """Emission: hand the serialized frame to the egress wire's far end.
+        The one stage partitioned execution overrides (a crossing record
+        instead of a local delivery event)."""
+        self.sched.schedule_at(arrival,
+                               lambda: self._deliver(out, frame, arrival))
 
     def _egress_done(self, port: SwitchPort) -> None:
         port.occupancy -= 1
@@ -186,10 +336,19 @@ class Switch:
         return sum(p.egress_drops for p in self.ports)
 
     def extras(self, prefix: str = "sw") -> Dict[str, float]:
-        """Per-port drop/occupancy counters, RunReport.extras-shaped."""
+        """Per-port drop/occupancy counters, RunReport.extras-shaped.
+
+        AQM keys appear only for ports with a policy installed — default
+        (drop-tail) extras stay byte-identical to the pre-pipeline switch.
+        """
         out: Dict[str, float] = {f"{prefix}_unrouted": float(self.unrouted)}
         for p in self.ports:
             out[f"{prefix}_p{p.port_id}_egress_drops"] = float(p.egress_drops)
             out[f"{prefix}_p{p.port_id}_egress_forwarded"] = float(p.tx_frames)
             out[f"{prefix}_p{p.port_id}_occ_high"] = float(p.occ_high)
+            if p.aqm is not None:
+                out[f"{prefix}_p{p.port_id}_ecn_marked"] = float(
+                    p.aqm.ecn_marked)
+                out[f"{prefix}_p{p.port_id}_aqm_early_drops"] = float(
+                    p.aqm.early_drops)
         return out

@@ -2,10 +2,10 @@
 # The API every scenario (benchmark, example, future PR) builds on.
 # Multi-host scenarios: TopologyConfig -> Cluster -> RunReport, under the
 # shared-clock loop or the partitioned engines (PARTITION_MODES).
-from .config import (CostConfig, DcaConfig, ExperimentConfig, LinkConfig,
-                     NodeConfig, PARTITION_MODES, PoolConfig, PortConfig,
-                     RssConfig, StackConfig, SwitchConfig, TopologyConfig,
-                     TrafficConfig)
+from .config import (AqmConfig, CostConfig, DcaConfig, ExperimentConfig,
+                     LinkConfig, NodeConfig, PARTITION_MODES, PipelineConfig,
+                     PoolConfig, PortConfig, RssConfig, StackConfig,
+                     SwitchConfig, TopologyConfig, TrafficConfig)
 from .runner import (make_server_factory, run_experiment,
                      run_topology_experiment, run_testbed)
 from .seeding import config_fingerprint, derive_seed
@@ -14,8 +14,9 @@ from .topology import (Client, Cluster, Node, partition_fallback_reason,
                        run_partitioned_topology)
 
 __all__ = [
+    "AqmConfig",
     "Client", "Cluster", "CostConfig", "DcaConfig", "ExperimentConfig",
-    "LinkConfig",
+    "LinkConfig", "PipelineConfig",
     "Node", "NodeConfig", "PARTITION_MODES", "PoolConfig", "PortConfig",
     "RssConfig", "StackConfig", "SwitchConfig", "TopologyConfig",
     "TrafficConfig",

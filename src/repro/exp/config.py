@@ -23,6 +23,11 @@ from repro.core.rss import DEFAULT_TABLE_SIZE
 
 TRAFFIC_MODES = ("open_loop", "closed_loop", "msb")
 TRAFFIC_ENGINES = ("event", "epoch", "epoch-jit")
+# the switch pipeline's AQM stage policies (repro.core.switch)
+AQM_KINDS = ("drop-tail", "red", "ecn")
+# loadgen congestion control: fixed offered rate (the paper's EtherLoadGen)
+# or DCTCP-style multiplicative adaptation on CE-mark/loss feedback
+CC_MODES = ("fixed", "dctcp")
 # how a topology's event loop executes: one shared SimClock (reference),
 # per-domain clocks synchronized in link-latency epochs (SimBricks,
 # arXiv:2012.14219), or the same partitioning spread across worker processes.
@@ -407,6 +412,24 @@ class TrafficConfig:
     ts_offset: int = DEFAULT_TS_OFFSET
     verify_integrity: bool = False
     max_tx_burst: int = 64
+    # congestion control (open_loop + sim_time): "fixed" offers rate_gbps
+    # unconditionally; "dctcp" starts at rate_gbps and adapts it per
+    # cc_window_ns of virtual time from the fraction of CE-marked/lost
+    # echoes (alpha = (1-g)*alpha + g*F; marked window: rate *= 1-alpha/2,
+    # clean window: rate += cc_increase_gbps — AIMD, so competing clients
+    # converge to a fair share), clamped to
+    # [cc_min_gbps, the attached link rate]
+    # cc_max_inflight is the TX-credit/cwnd analogue: a client never has
+    # more than this many frames outstanding (0 == uncapped).  Rate pacing
+    # alone keeps pouring into the bottleneck queue for a full feedback
+    # delay after an overshoot; the in-flight cap is the ack-clocked
+    # backpressure that stops it immediately.
+    cc_mode: str = "fixed"
+    cc_window_ns: int = 100_000
+    cc_gain: float = 0.0625
+    cc_min_gbps: float = 0.05
+    cc_increase_gbps: float = 0.25
+    cc_max_inflight: int = 0
 
     def __post_init__(self) -> None:
         if self.mode not in TRAFFIC_MODES:
@@ -418,6 +441,23 @@ class TrafficConfig:
             raise ValueError(f"traffic kind must be one of {TRAFFIC_KINDS}")
         if self.packet_size < 64:
             raise ValueError("packet_size must be >= 64 (MIN_FRAME)")
+        if self.cc_mode not in CC_MODES:
+            raise ValueError(f"cc_mode must be one of {CC_MODES}")
+        if self.cc_mode != "fixed":
+            if self.mode != "open_loop" or not self.sim_time:
+                raise ValueError(
+                    "cc_mode='dctcp' needs open_loop traffic in sim time "
+                    "(rates adapt per virtual-time window)")
+            if self.cc_window_ns < 1:
+                raise ValueError("cc_window_ns must be >= 1")
+            if not 0.0 < self.cc_gain <= 1.0:
+                raise ValueError("cc_gain must be in (0, 1]")
+            if self.cc_min_gbps <= 0.0:
+                raise ValueError("cc_min_gbps must be > 0")
+            if self.cc_increase_gbps <= 0.0:
+                raise ValueError("cc_increase_gbps must be > 0")
+            if self.cc_max_inflight < 0:
+                raise ValueError("cc_max_inflight must be >= 0 (0 uncapped)")
 
     def to_dict(self) -> Dict[str, Any]:
         return _config_to_dict(self)
@@ -490,13 +530,104 @@ class ExperimentConfig:
 # -- multi-host topologies ----------------------------------------------------
 
 @dataclass(frozen=True)
+class AqmConfig:
+    """One egress port's active-queue-management policy (the pipeline's AQM
+    stage — :class:`repro.core.switch.AqmRed`).
+
+    ``kind``: ``"drop-tail"`` (no policy object installed — bit-identical to
+    the pre-pipeline switch), ``"red"`` (probabilistic early drop on the
+    classic RED curve over instantaneous queue depth), or ``"ecn"`` (the same
+    curve applied as a CE mark instead of a drop — the DCTCP fabric half).
+    ``seed`` feeds the deterministic counter-seeded per-port RNG stream.
+    """
+
+    kind: str = "drop-tail"
+    min_thresh: int = 8
+    max_thresh: int = 24
+    max_p: float = 0.1
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.kind not in AQM_KINDS:
+            raise ValueError(f"aqm kind must be one of {AQM_KINDS}")
+        if not 1 <= self.min_thresh <= self.max_thresh:
+            raise ValueError("need 1 <= min_thresh <= max_thresh")
+        if not 0.0 < self.max_p <= 1.0:
+            raise ValueError("max_p must be in (0, 1]")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _config_to_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "AqmConfig":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    """The per-port forwarding pipeline's configurable stages.
+
+    ``classify`` names the match key the parse stage extracts (``"dst-ip"``
+    is the only key today — the flow dst_ip the LPM table routes on).
+    ``aqm`` is the default AQM policy applied to **every** egress port;
+    ``per_port_aqm`` (index == port id, entries may be None == fall through
+    to ``aqm``) overrides it per port — e.g. RED only on the hot incast
+    egress.  Length is validated at build time against the actual port
+    count, which a config cannot know (ports = nodes + clients [+ trunk]).
+    """
+
+    classify: str = "dst-ip"
+    aqm: AqmConfig = field(default_factory=AqmConfig)
+    per_port_aqm: Optional[Tuple[Optional[AqmConfig], ...]] = None
+
+    def __post_init__(self) -> None:
+        if self.classify != "dst-ip":
+            raise ValueError("classify must be 'dst-ip'")
+        if self.per_port_aqm is not None and len(self.per_port_aqm) == 0:
+            raise ValueError("per_port_aqm must be nonempty or None")
+
+    def aqm_for(self, port_id: int) -> AqmConfig:
+        """The effective policy for one port (per-port override or default)."""
+        if self.per_port_aqm is not None and \
+                0 <= port_id < len(self.per_port_aqm):
+            per = self.per_port_aqm[port_id]
+            if per is not None:
+                return per
+        return self.aqm
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _config_to_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "PipelineConfig":
+        d = dict(d)
+        d["aqm"] = AqmConfig.from_dict(d.get("aqm", {}))
+        if d.get("per_port_aqm") is not None:
+            d["per_port_aqm"] = tuple(
+                None if e is None else AqmConfig.from_dict(e)
+                for e in d["per_port_aqm"])
+        return cls(**d)
+
+
+@dataclass(frozen=True)
 class SwitchConfig:
     """The fabric: an output-queued switch whose ports all carry ``link``
     (full duplex) and buffer at most ``egress_capacity`` frames per egress
-    port (drop-tail — the incast loss mechanism)."""
+    port (drop-tail — the incast loss mechanism).
+
+    ``pipeline`` (optional) configures the per-port forwarding pipeline's
+    AQM stage; ``None`` keeps pure drop-tail, bit-identical to pre-pipeline
+    reports.  ``trunk`` (optional) turns the fabric into **two** switches
+    joined by a trunk link carrying ``trunk`` timing — set ``trunk.gbps``
+    below the aggregate endpoint rate for an oversubscribed core.  Endpoint
+    placement defaults to nodes on switch 0 / clients on switch 1 and is
+    overridden by ``TopologyConfig.node_switch``/``client_switch``.
+    """
 
     egress_capacity: int = 64
     link: LinkConfig = field(default_factory=LinkConfig)
+    pipeline: Optional[PipelineConfig] = None
+    trunk: Optional[LinkConfig] = None
 
     def __post_init__(self) -> None:
         if self.egress_capacity < 1:
@@ -509,6 +640,10 @@ class SwitchConfig:
     def from_dict(cls, d: Dict[str, Any]) -> "SwitchConfig":
         d = dict(d)
         d["link"] = LinkConfig.from_dict(d.get("link", {}))
+        if d.get("pipeline") is not None:
+            d["pipeline"] = PipelineConfig.from_dict(d["pipeline"])
+        if d.get("trunk") is not None:
+            d["trunk"] = LinkConfig.from_dict(d["trunk"])
         return cls(**d)
 
 
@@ -603,6 +738,11 @@ class TopologyConfig:
     # per-client destination node names (len == n_clients); None == all
     # clients send to ``target``
     client_targets: Optional[Tuple[str, ...]] = None
+    # two-switch placement (requires switch.trunk): which switch (0 or 1)
+    # each node/client attaches to.  None == the default split (nodes on
+    # switch 0, clients on switch 1).
+    node_switch: Optional[Tuple[int, ...]] = None
+    client_switch: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self) -> None:
         if not self.nodes:
@@ -647,7 +787,30 @@ class TopologyConfig:
                 raise ValueError(
                     "client_targets is an echo-topology knob; serving "
                     "clients address the balancer")
+        for label, placement, count in (
+                ("node_switch", self.node_switch, len(self.nodes)),
+                ("client_switch", self.client_switch, self.n_clients)):
+            if placement is None:
+                continue
+            if self.switch.trunk is None:
+                raise ValueError(
+                    f"{label} needs a two-switch fabric (switch.trunk)")
+            if len(placement) != count:
+                raise ValueError(
+                    f"{label} has {len(placement)} entries, need {count}")
+            if any(s not in (0, 1) for s in placement):
+                raise ValueError(f"{label} entries must be 0 or 1")
         if self.serving is not None:
+            pipe = self.switch.pipeline
+            if pipe is not None and (
+                    pipe.aqm.kind != "drop-tail" or pipe.per_port_aqm):
+                raise ValueError(
+                    "serving topologies don't support AQM marking (serving "
+                    "frames carry their own header layout)")
+            if self.traffic.cc_mode != "fixed":
+                raise ValueError(
+                    "serving topologies drive load from serving.qps; "
+                    "cc_mode must stay 'fixed'")
             self._validate_serving(names)
 
     def _validate_serving(self, names: List[str]) -> None:
@@ -705,6 +868,9 @@ class TopologyConfig:
             d["serving"] = ServingConfig.from_dict(d["serving"])
         if d.get("client_targets") is not None:
             d["client_targets"] = tuple(d["client_targets"])
+        for key in ("node_switch", "client_switch"):
+            if d.get(key) is not None:
+                d[key] = tuple(d[key])
         return cls(**d)
 
     def with_traffic(self, **kw: Any) -> "TopologyConfig":

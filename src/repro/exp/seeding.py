@@ -31,14 +31,41 @@ EXECUTION_ONLY_KEYS = ("name", "partition", "partition_workers",
                        "partition_sanitize")
 
 
+# config keys that are *inert at their default value*: they were added after
+# fingerprints already seeded real experiments, so when unset they are elided
+# before hashing — a config that doesn't use the feature hashes (and seeds)
+# exactly as it did before the feature existed.  Non-default values stay in
+# the hash, keeping distinct experiments decorrelated.
+_INERT_WHEN_NONE = ("node_switch", "client_switch")          # topology level
+_INERT_SWITCH_WHEN_NONE = ("pipeline", "trunk")              # switch level
+_CC_KEYS = ("cc_mode", "cc_window_ns", "cc_gain", "cc_min_gbps",
+            "cc_increase_gbps", "cc_max_inflight")           # traffic level
+
+
 def scrub_execution_keys(cfg_dict: Dict[str, Any]) -> Dict[str, Any]:
     """A copy of a config dict with execution-only knobs removed (top-level
     ``name``/``partition``/``partition_workers``/``partition_sanitize`` and
-    ``traffic.engine``)."""
+    ``traffic.engine``) and later-added feature knobs elided when inert
+    (switch ``pipeline``/``trunk`` unset, ``cc_mode`` fixed, default
+    two-switch placement)."""
     out = {k: v for k, v in cfg_dict.items() if k not in EXECUTION_ONLY_KEYS}
+    for key in _INERT_WHEN_NONE:
+        if key in out and out[key] is None:
+            del out[key]
     traffic = out.get("traffic")
     if isinstance(traffic, dict):
-        out["traffic"] = {k: v for k, v in traffic.items() if k != "engine"}
+        traffic = {k: v for k, v in traffic.items() if k != "engine"}
+        if traffic.get("cc_mode", "fixed") == "fixed":
+            # every cc_* knob is inert while cc is off
+            traffic = {k: v for k, v in traffic.items() if k not in _CC_KEYS}
+        out["traffic"] = traffic
+    switch = out.get("switch")
+    if isinstance(switch, dict):
+        switch = dict(switch)
+        for key in _INERT_SWITCH_WHEN_NONE:
+            if switch.get(key) is None:
+                switch.pop(key, None)
+        out["switch"] = switch
     return out
 
 

@@ -51,10 +51,11 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import (EthConf, EthDev, EventScheduler, LatencyRecorder,
-                        LoadGen, NetworkStack, PacketPool, RunReport,
-                        SimClock, Switch, ThroughputMeter, TrafficPattern,
-                        Wire, writeback_extras)
+from repro.core import (AqmRed, DctcpRateController, EthConf, EthDev,
+                        EventScheduler, LatencyRecorder, LoadGen,
+                        NetworkStack, PacketPool, RunReport, SimClock, Switch,
+                        ThroughputMeter, TrafficPattern, Wire,
+                        writeback_extras)
 from repro.core.packet import (l2fwd_echo, l2fwd_echo_vec, swap_macs,
                                swap_macs_vec)
 from repro.core.partition import (ClientDomain, Crossing, DomainScheduler,
@@ -242,6 +243,136 @@ def _echo_schedule(t, seed: int, dur_ns: int, start: int):
     return times, sizes, rng
 
 
+class TrunkFabric:
+    """Two switches joined by a trunk link, presenting the single-switch
+    control/data-plane surface (``attach``/``add_route``/``send``/
+    ``set_aqm``/``extras``) in the global endpoint namespace the builder
+    already speaks (nodes ``0..N-1``, clients ``N..N+G-1``).
+
+    Each switch carries its local endpoints plus one **trunk port** (always
+    the switch's last port, pseudo ids ``N+G`` for switch 0 and ``N+G+1``
+    for switch 1 in ``set_aqm``).  The trunk port's egress wire carries the
+    trunk link's timing — set ``trunk.gbps`` below the aggregate edge rate
+    and the core oversubscribes: the trunk egress queue builds and its
+    drop/mark counters (``sw0_p*_...``/``sw1_p*_...`` extras) light up
+    first.  Frames landing off one switch's trunk egress enter the peer's
+    forward pipeline at arrival, so a cross-switch path pays: uplink →
+    switch A queue+egress → trunk wire → switch B queue+egress → endpoint.
+
+    Everything rides the one shared :class:`EventScheduler`, so the trunk
+    fabric is exactly as deterministic as the single switch.
+    """
+
+    def __init__(self, cfg: TopologyConfig, sched: EventScheduler):
+        link, trunk = cfg.switch.link, cfg.switch.trunk
+        N, G = len(cfg.nodes), cfg.n_clients
+        node_sw = cfg.node_switch or tuple(0 for _ in range(N))
+        client_sw = cfg.client_switch or tuple(1 for _ in range(G))
+        self.place: List[int] = list(node_sw) + list(client_sw)
+        self.n_endpoints = N + G
+        counts = [self.place.count(0), self.place.count(1)]
+        self.switches: List[Switch] = [
+            Switch(counts[si] + 1, sched, gbps=link.gbps,
+                   latency_ns=link.latency_ns,
+                   egress_capacity=cfg.switch.egress_capacity)
+            for si in (0, 1)
+        ]
+        self.trunk_port = [counts[0], counts[1]]
+        # local port ids assigned in global endpoint order (deterministic)
+        self.local: List[int] = []
+        next_id = [0, 0]
+        for si in self.place:
+            self.local.append(next_id[si])
+            next_id[si] += 1
+        for si, sw in enumerate(self.switches):
+            tp = sw.ports[self.trunk_port[si]]
+            # the trunk port's wires carry the trunk link's timing (the
+            # ingress wire is unused — peer frames enter via _forward — but
+            # is kept consistent for anyone reading port state)
+            tp.egress = Wire(gbps=trunk.gbps, latency_ns=trunk.latency_ns)
+            tp.ingress = Wire(gbps=trunk.gbps, latency_ns=trunk.latency_ns)
+            peer, ptp = self.switches[1 - si], self.trunk_port[1 - si]
+            sw.attach(self.trunk_port[si],
+                      lambda frame, t_ns, _p=peer, _t=ptp:
+                          _p._forward(_t, frame))
+
+    def _home(self, eid: int) -> Tuple[int, Switch, int]:
+        si = self.place[eid]
+        return si, self.switches[si], self.local[eid]
+
+    # -- the single-switch surface the builder/driver speak -------------------
+    def attach(self, eid: int, sink) -> None:
+        _, sw, lp = self._home(eid)
+        sw.attach(lp, sink)
+
+    def add_route(self, dst_ip: int, eid: int, prefix_len: int = 32) -> None:
+        """Route on the home switch directly; on the peer, via its trunk."""
+        si, sw, lp = self._home(eid)
+        sw.add_route(dst_ip, lp, prefix_len)
+        other = 1 - si
+        self.switches[other].add_route(dst_ip, self.trunk_port[other],
+                                       prefix_len)
+
+    def send(self, eid: int, frame: np.ndarray,
+             t_ns: Optional[int] = None) -> None:
+        _, sw, lp = self._home(eid)
+        sw.send(lp, frame, t_ns=t_ns)
+
+    def set_aqm(self, pid: int, aqm: Optional[AqmRed]) -> None:
+        if pid >= self.n_endpoints:   # pseudo ids: the two trunk ports
+            si = pid - self.n_endpoints
+            self.switches[si].set_aqm(self.trunk_port[si], aqm)
+            return
+        _, sw, lp = self._home(pid)
+        sw.set_aqm(lp, aqm)
+
+    def switch_index(self, pid: int) -> int:
+        """Which physical switch owns fabric port ``pid`` (seed salt)."""
+        if pid >= self.n_endpoints:
+            return pid - self.n_endpoints
+        return self.place[pid]
+
+    @property
+    def egress_drops(self) -> int:
+        return sum(sw.egress_drops for sw in self.switches)
+
+    def extras(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for si, sw in enumerate(self.switches):
+            out.update(sw.extras(prefix=f"sw{si}"))
+        return out
+
+
+def _install_aqm(cfg: TopologyConfig, fabric) -> None:
+    """Apply ``switch.pipeline`` to a built fabric: one fresh
+    :class:`~repro.core.switch.AqmRed` per non-drop-tail egress port.
+
+    Port ids are global endpoint ids; a trunk fabric has two extra ports
+    (``N+G`` = switch 0's trunk, ``N+G+1`` = switch 1's).  ``per_port_aqm``
+    may cover just the endpoints (trunk ports fall through to the default
+    policy) or every port.  On a trunk fabric the owning switch's index is
+    added to the policy seed, so the two replicas draw distinct streams."""
+    pipe = cfg.switch.pipeline
+    if pipe is None:
+        return
+    n_end = len(cfg.nodes) + cfg.n_clients
+    n_ports = n_end + (2 if cfg.switch.trunk is not None else 0)
+    if pipe.per_port_aqm is not None \
+            and len(pipe.per_port_aqm) not in (n_end, n_ports):
+        raise ValueError(
+            f"per_port_aqm has {len(pipe.per_port_aqm)} entries; this fabric "
+            f"has {n_ports} ports ({n_end} endpoint-facing)")
+    for pid in range(n_ports):
+        ac = pipe.aqm_for(pid)
+        if ac.kind == "drop-tail":
+            continue
+        salt = fabric.switch_index(pid) if isinstance(fabric, TrunkFabric) \
+            else 0
+        fabric.set_aqm(pid, AqmRed(
+            kind=ac.kind, min_thresh=ac.min_thresh,
+            max_thresh=ac.max_thresh, max_p=ac.max_p, seed=ac.seed + salt))
+
+
 class Cluster:
     """Live multi-host scenario built from one :class:`TopologyConfig`."""
 
@@ -261,10 +392,14 @@ class Cluster:
             import repro.serving  # noqa: F401 — registers the serving kinds
         clock = SimClock()
         sched = EventScheduler(clock)
-        switch = Switch(len(cfg.nodes) + cfg.n_clients, sched,
-                        gbps=cfg.switch.link.gbps,
-                        latency_ns=cfg.switch.link.latency_ns,
-                        egress_capacity=cfg.switch.egress_capacity)
+        if cfg.switch.trunk is not None:
+            switch = TrunkFabric(cfg, sched)
+        else:
+            switch = Switch(len(cfg.nodes) + cfg.n_clients, sched,
+                            gbps=cfg.switch.link.gbps,
+                            latency_ns=cfg.switch.link.latency_ns,
+                            egress_capacity=cfg.switch.egress_capacity)
+        _install_aqm(cfg, switch)
         ips = _resolve_node_ips(cfg)
         nodes: List[Node] = []
         for i, nc in enumerate(cfg.nodes):
@@ -323,12 +458,38 @@ class Cluster:
         dur_ns = int((t.duration_s if duration_s is None else duration_s) * 1e9)
         clock, sched = self.clock, self.sched
         start = clock.now_ns
-        # per-client analytic schedules: [times, sizes, cursor, rng]
+        end_t = start + dur_ns
+        cc_on = t.cc_mode == "dctcp" and self.cfg.serving is None
+        # per-client analytic schedules: [times, sizes, cursor, rng].  DCTCP
+        # clients have no precomputed schedule (times=None): their cursor is
+        # the next emission instant (float ns, None == done), minted per
+        # frame from the controller's current rate.
         scheds: List[list] = []
         for client in self.clients:
             if client.serving is not None:
                 times = client.serving.plan(dur_ns, start)
                 scheds.append([times, None, 0, None])
+                continue
+            if cc_on:
+                # Stagger window phases across clients so rate cuts and
+                # recoveries do not synchronise (synchronised windows make
+                # all clients overshoot and back off in lockstep, idling
+                # the bottleneck).  The offset is a pure function of the
+                # client index, so runs stay deterministic.
+                phase = (len(scheds) * t.cc_window_ns) // max(
+                    1, len(self.clients))
+                client.lg.attach_cc(DctcpRateController(
+                    rate_gbps=t.rate_gbps, window_ns=t.cc_window_ns,
+                    gain=t.cc_gain, min_gbps=t.cc_min_gbps,
+                    max_gbps=self.cfg.switch.link.gbps,
+                    increase_gbps=t.cc_increase_gbps,
+                    max_inflight=t.cc_max_inflight,
+                    start_ns=start + phase))
+                if dur_ns > 0:
+                    client.lg.meter.open_window(start)
+                scheds.append([None, None,
+                               float(start) if dur_ns > 0 else None,
+                               np.random.default_rng(client.seed)])
                 continue
             times, sizes, rng = _echo_schedule(t, client.seed, dur_ns, start)
             if len(times):
@@ -341,6 +502,28 @@ class Cluster:
             # 1) due emissions, client order then time order (deterministic)
             for client, st in zip(self.clients, scheds):
                 times, sizes, i, rng = st
+                if times is None:   # DCTCP rate-adaptive client
+                    cc = client.lg.cc
+                    nxt = i
+                    while nxt is not None and int(nxt) <= now:
+                        t_emit = int(nxt)
+                        # a tick that finds the in-flight cap exhausted is
+                        # forfeited (paced probing): the cursor still
+                        # advances, and the freed slot is used by the next
+                        # tick after echoes drain the window
+                        if cc.can_send():
+                            frame = client.lg.make_frame(
+                                client.pool, t.packet_size, t_emit,
+                                rng if t.verify_integrity else None)
+                            if frame is not None:
+                                self.switch.send(client.port_id, frame,
+                                                 t_ns=t_emit)
+                        moved += 1
+                        nxt += cc.gap_ns(t.packet_size)
+                        if nxt >= end_t:
+                            nxt = None
+                    st[2] = nxt
+                    continue
                 n = len(times)
                 while i < n and times[i] <= now:
                     t_emit = int(times[i])
@@ -369,7 +552,10 @@ class Cluster:
             # 4) advance to the next event
             cands: List[int] = []
             for st in scheds:
-                if st[2] < len(st[0]):
+                if st[0] is None:
+                    if st[2] is not None:
+                        cands.append(int(st[2]))
+                elif st[2] < len(st[0]):
                     cands.append(int(st[0][st[2]]))
             nt = sched.next_time_ns()
             if nt is not None:
@@ -483,11 +669,23 @@ def _client_chunk(lg: LoadGen) -> Dict[str, object]:
     """One echo client's contribution to the report, as plain picklable data
     (mirrors :meth:`repro.core.partition.ClientDomain.chunk`)."""
     m = lg.meter
-    return {"sent": lg.flight.sent,
-            "received": lg.flight.received,
-            "integrity_errors": lg.flight.integrity_errors,
-            "latency": lg.latency.values().copy(),
-            "meter": (m.packets, m.bytes, m.start_ns, m.end_ns)}
+    out: Dict[str, object] = {
+        "sent": lg.flight.sent,
+        "received": lg.flight.received,
+        "integrity_errors": lg.flight.integrity_errors,
+        "latency": lg.latency.values().copy(),
+        "meter": (m.packets, m.bytes, m.start_ns, m.end_ns)}
+    # congestion telemetry keys exist only when the fabric marked something
+    # or a rate controller ran — pre-AQM chunks (and the partition replicas
+    # that mirror this function) stay byte-identical
+    if lg.flight.ce_marked or lg.cc is not None:
+        out["ce_marked"] = lg.flight.ce_marked
+    if lg.cc is not None:
+        out["cc_final_rate_gbps"] = lg.cc.rate_gbps
+        out["cc_min_rate_gbps"] = lg.cc.rate_min
+        out["cc_windows"] = lg.cc.windows
+        out["cc_lost_inferred"] = lg.cc.lost_accounted
+    return out
 
 
 def _node_chunk(dev: EthDev, server: NetworkStack) -> Dict[str, object]:
@@ -567,6 +765,10 @@ def assemble_echo_report(cfg: TopologyConfig,
     for gi, c in enumerate(client_chunks):
         rep.extras[f"g{gi}_sent"] = float(c["sent"])
         rep.extras[f"g{gi}_received"] = float(c["received"])
+        for key in ("ce_marked", "cc_final_rate_gbps", "cc_min_rate_gbps",
+                    "cc_windows", "cc_lost_inferred"):
+            if key in c:
+                rep.extras[f"g{gi}_{key}"] = float(c[key])
     _append_infra_extras(rep, cfg, node_chunks, switch_extras,
                          virtual_elapsed_ns)
     return rep
@@ -586,11 +788,30 @@ def partition_fallback_reason(cfg: TopologyConfig) -> Optional[str]:
     so zero-cost stacks (and stack kinds we haven't proven self-scheduling,
     e.g. the pipeline stack's zero-charge passes) stay on the shared clock.
     Serving topologies share live balancer state across nodes and are out of
-    scope entirely."""
+    scope entirely.  The PR-10 features are conservatively excluded until
+    proven: an active AQM policy reorders its decision counter relative to
+    the shared loop's arrival interleaving, a trunk fabric inserts a
+    switch-to-switch hop the single-SwitchDomain layout cannot express, and
+    DCTCP clients adapt their *emission schedule* on echo feedback — the one
+    thing the partition contract assumes is precomputable per domain."""
     if cfg.serving is not None:
         return "serving topology: balancer reads live cross-domain state"
     if cfg.switch.link.latency_ns < 1:
         return "zero-latency links leave no conservative lookahead window"
+    if cfg.switch.trunk is not None:
+        return "multi-switch trunk fabric not proven partition-equivalent"
+    pipe = cfg.switch.pipeline
+    if pipe is not None:
+        kinds = {pipe.aqm.kind}
+        for entry in pipe.per_port_aqm or ():
+            if entry is not None:
+                kinds.add(entry.kind)
+        kinds.discard("drop-tail")   # explicit drop-tail == the default path
+        if kinds:
+            return (f"AQM policy {sorted(kinds)[0]!r} not proven "
+                    "partition-equivalent")
+    if cfg.traffic.cc_mode != "fixed":
+        return "DCTCP rate-adaptive clients adapt on cross-domain echo feedback"
     for nc in cfg.nodes:
         kind = effective_stack_config(nc.stack, nc.dca).kind
         m = (nc.stack.cost if nc.stack.cost is not None

@@ -1,0 +1,307 @@
+"""Per-port switch pipeline: AQM stages (RED early-drop / ECN marking),
+DCTCP rate adaptation, and the trunk fabric (PR 10).
+
+Three layers of coverage (the hypothesis property suite for the same
+surfaces lives in ``test_aqm_property.py``):
+
+* **switch units** — AQM verdict mechanics on a bare :class:`Switch`: the
+  certain-drop RED band, CE marking on delivered frames, decision-time
+  ``occ_high`` sampling (the satellite bugfix: a policy that refuses frames
+  at depth k must still record the demand that reached it), and replayable
+  counter-seeded decision streams.
+* **topology guarantees** — an unset/drop-tail ``PipelineConfig`` is
+  bit-identical to no pipeline at all; ECN+DCTCP runs are bit-identical
+  per config + seed; the headline incast contract (ECN cuts egress drops
+  >= 10x below drop-tail at the same offered load).
+* **trunk fabric** — two-switch topologies expose per-switch extras,
+  conserve frames, and an oversubscribed trunk concentrates the loss at
+  the trunk egress port.
+"""
+import numpy as np
+import pytest
+
+from repro.core import AqmRed, EventScheduler, Switch, aqm_uniform_u64
+from repro.core.packet import MIN_FRAME, read_ce, set_ce, write_flow
+from repro.core.partition import _pack_crossings, _unpack_crossings
+from repro.exp import (AqmConfig, LinkConfig, NodeConfig, PipelineConfig,
+                       PoolConfig, SwitchConfig, TopologyConfig,
+                       TrafficConfig, run_topology_experiment)
+
+
+def _frame(dst_ip: int, size: int = 1250) -> np.ndarray:
+    buf = np.zeros(max(size, MIN_FRAME), dtype=np.uint8)
+    write_flow(buf, 0x0A010001, dst_ip, 1024, 443)
+    return buf
+
+
+def _switch_with_aqm(kind: str, min_thresh: int, max_thresh: int,
+                     max_p: float = 1.0, seed: int = 1,
+                     egress_capacity: int = 64):
+    sched = EventScheduler()
+    sw = Switch(2, sched, gbps=10.0, latency_ns=0,
+                egress_capacity=egress_capacity)
+    out = []
+    sw.attach(1, lambda frame, t: out.append(frame))
+    sw.add_route(0xC0A80001, 1)
+    sw.set_aqm(1, AqmRed(kind=kind, min_thresh=min_thresh,
+                         max_thresh=max_thresh, max_p=max_p, seed=seed))
+    return sched, sw, out
+
+
+# -- switch units -------------------------------------------------------------
+
+def test_red_certain_band_drops_every_frame():
+    """min == max == 1: depth (occupancy+1) is always >= max_thresh, so the
+    RED curve is pinned at 1.0 and every arrival is an early drop."""
+    sched, sw, out = _switch_with_aqm("red", 1, 1)
+    for _ in range(10):
+        sw.send(0, _frame(0xC0A80001), t_ns=0)
+    sched.run_all()
+    port = sw.ports[1]
+    assert out == []
+    assert port.aqm.early_drops == 10
+    assert port.egress_drops == 0          # never reached the buffer
+    assert port.egress_enqueued == 0
+
+
+def test_occ_high_sampled_at_decision_time():
+    """The satellite bugfix: a RED drop at depth k leaves ``occ_high >= k``
+    even though nothing was ever enqueued — demand is recorded when the
+    policy looks, not only on enqueue."""
+    sched, sw, _out = _switch_with_aqm("red", 1, 1)
+    sw.send(0, _frame(0xC0A80001), t_ns=0)
+    sched.run_all()
+    port = sw.ports[1]
+    assert port.occupancy == 0
+    assert port.egress_enqueued == 0
+    # pre-fix behavior: occ_high stays 0 because enqueue never ran
+    assert port.occ_high == 1
+    assert sw.extras()["sw_p1_occ_high"] == 1.0
+
+
+def test_ecn_certain_band_marks_and_delivers_every_frame():
+    sched, sw, out = _switch_with_aqm("ecn", 1, 1)
+    for _ in range(5):
+        sw.send(0, _frame(0xC0A80001), t_ns=0)
+    sched.run_all()
+    port = sw.ports[1]
+    assert len(out) == 5
+    assert all(read_ce(f) for f in out)
+    assert port.aqm.ecn_marked == 5
+    assert port.aqm.early_drops == 0
+    ex = sw.extras()
+    assert ex["sw_p1_ecn_marked"] == 5.0
+    assert ex["sw_p1_aqm_early_drops"] == 0.0
+
+
+def test_below_min_thresh_is_a_no_op():
+    """One frame at a time through a wide-open band: depth 1 < min_thresh,
+    probability 0, no marks, no drops — indistinguishable from drop-tail."""
+    sched, sw, out = _switch_with_aqm("ecn", 8, 24, max_p=0.5)
+    for _ in range(5):
+        sw.send(0, _frame(0xC0A80001), t_ns=0)
+        sched.run_all()                     # drain: queue never builds
+    assert len(out) == 5
+    assert not any(read_ce(f) for f in out)
+    assert sw.ports[1].aqm.ecn_marked == 0
+
+
+def test_aqm_decision_stream_is_replayable_from_counters():
+    """Counter-seeded decisions: two switches with the same policy config
+    drop/pass the identical pattern, and the raw uniform stream is a pure
+    function of (seed, port, counter)."""
+    def run_once():
+        sched, sw, out = _switch_with_aqm("red", 2, 6, max_p=0.5, seed=42,
+                                          egress_capacity=4)
+        for i in range(40):                 # overlapping arrivals: queue builds
+            sw.send(0, _frame(0xC0A80001), t_ns=i * 100)
+        sched.run_all()
+        p = sw.ports[1]
+        return (len(out), p.aqm.early_drops, p.aqm.decisions, p.egress_drops)
+
+    assert run_once() == run_once()
+    assert [aqm_uniform_u64(42, 1, k) for k in range(8)] \
+        == [aqm_uniform_u64(42, 1, k) for k in range(8)]
+    assert aqm_uniform_u64(42, 1, 0) != aqm_uniform_u64(42, 2, 0)
+    assert aqm_uniform_u64(42, 1, 0) != aqm_uniform_u64(43, 1, 0)
+
+
+def test_aqm_config_validation():
+    with pytest.raises(ValueError, match="kind"):
+        AqmRed(kind="codel", min_thresh=1, max_thresh=2, max_p=0.5, seed=0)
+    with pytest.raises(ValueError, match="min_thresh"):
+        AqmRed(kind="red", min_thresh=5, max_thresh=2, max_p=0.5, seed=0)
+    with pytest.raises(ValueError, match="max_p"):
+        AqmRed(kind="red", min_thresh=1, max_thresh=2, max_p=0.0, seed=0)
+
+
+# -- topology guarantees ------------------------------------------------------
+
+def _incast(pipeline=None, cc="fixed", dur=0.0005, seed=7, trunk=None,
+            **topo_kw):
+    return TopologyConfig(
+        name="aqm-test-incast",
+        nodes=(NodeConfig(name="srv", pool=PoolConfig(n_slots=16384)),),
+        n_clients=4,
+        client_pool=PoolConfig(n_slots=16384),
+        switch=SwitchConfig(egress_capacity=16,
+                            link=LinkConfig(gbps=10.0, latency_ns=1000),
+                            pipeline=pipeline, trunk=trunk),
+        traffic=TrafficConfig(mode="open_loop", rate_gbps=4.0,
+                              packet_size=1518, duration_s=dur, seed=seed,
+                              cc_mode=cc, cc_window_ns=100_000,
+                              cc_increase_gbps=0.1, cc_max_inflight=8),
+        target="srv", **topo_kw)
+
+
+def test_drop_tail_pipeline_is_bit_identical_to_no_pipeline():
+    """An explicit drop-tail pipeline (and an unset one) must not perturb a
+    single bit of the report — the refactor's no-behavior-change contract."""
+    plain = run_topology_experiment(_incast(pipeline=None)).to_dict()
+    explicit = run_topology_experiment(
+        _incast(pipeline=PipelineConfig(aqm=AqmConfig(kind="drop-tail"))))
+    assert explicit.to_dict() == plain
+
+
+def test_ecn_dctcp_run_is_deterministic():
+    pipe = PipelineConfig(aqm=AqmConfig(kind="ecn", min_thresh=4,
+                                        max_thresh=12, max_p=0.1, seed=1))
+    a = run_topology_experiment(_incast(pipeline=pipe, cc="dctcp")).to_dict()
+    b = run_topology_experiment(_incast(pipeline=pipe, cc="dctcp")).to_dict()
+    assert a == b
+
+
+def test_ecn_dctcp_cuts_egress_drops_vs_drop_tail():
+    """The headline contract, at test scale: same offered load, ECN+DCTCP
+    loses >= 10x fewer frames to the egress buffer than drop-tail."""
+    dt = run_topology_experiment(_incast(dur=0.002))
+    pipe = PipelineConfig(aqm=AqmConfig(kind="ecn", min_thresh=4,
+                                        max_thresh=12, max_p=0.1, seed=1))
+    ec = run_topology_experiment(_incast(pipeline=pipe, cc="dctcp",
+                                         dur=0.002))
+    dt_drops = dt.extras["sw_p0_egress_drops"]
+    ec_drops = ec.extras["sw_p0_egress_drops"]
+    assert dt_drops > 0
+    assert ec_drops * 10 <= dt_drops
+    assert ec.extras["sw_p0_ecn_marked"] > 0
+    # the controller actually adapted: some window cut below the configured
+    # rate (the final rate may have recovered all the way to line rate)
+    assert ec.extras["g0_cc_windows"] > 0
+    assert ec.extras["g0_cc_min_rate_gbps"] < 4.0
+
+
+def test_red_dctcp_converts_egress_drops_to_early_drops():
+    pipe = PipelineConfig(aqm=AqmConfig(kind="red", min_thresh=4,
+                                        max_thresh=12, max_p=0.1, seed=1))
+    rep = run_topology_experiment(_incast(pipeline=pipe, cc="dctcp",
+                                          dur=0.002))
+    assert rep.extras["sw_p0_egress_drops"] == 0
+    assert rep.extras["sw_p0_aqm_early_drops"] > 0
+
+
+def test_per_port_aqm_overrides_the_default_policy():
+    """Port 0 (the server egress, where the incast queue builds) gets ECN;
+    every other port keeps the default drop-tail — only port 0 reports AQM
+    extras, and it marks."""
+    per_port = (AqmConfig(kind="ecn", min_thresh=4, max_thresh=12,
+                          max_p=0.1, seed=1),) + (None,) * 4
+    pipe = PipelineConfig(per_port_aqm=per_port)
+    rep = run_topology_experiment(_incast(pipeline=pipe, cc="dctcp",
+                                          dur=0.002))
+    assert rep.extras["sw_p0_ecn_marked"] > 0
+    assert "sw_p1_ecn_marked" not in rep.extras
+
+
+# -- trunk fabric -------------------------------------------------------------
+
+def test_trunk_fabric_runs_and_reports_per_switch_extras():
+    """Default placement (nodes on switch 0, clients on switch 1): traffic
+    crosses the trunk both ways, both switches report counters, and the
+    run is deterministic."""
+    cfg = _incast(trunk=LinkConfig(gbps=40.0, latency_ns=2000), dur=0.001)
+    rep = run_topology_experiment(cfg)
+    assert rep.received > 0
+    sw0 = {k for k in rep.extras if k.startswith("sw0_")}
+    sw1 = {k for k in rep.extras if k.startswith("sw1_")}
+    assert sw0 and sw1
+    # switch 0: server local port 0, trunk port 1; switch 1: clients 0-3,
+    # trunk port 4.  Requests leave sw1's trunk, land on the server via
+    # sw0 port 0; echoes return through sw0's trunk port 1.
+    assert rep.extras["sw0_p0_egress_forwarded"] > 0
+    assert rep.extras["sw0_p1_egress_forwarded"] > 0
+    assert rep.extras["sw1_p4_egress_forwarded"] > 0
+    assert rep.to_dict() == run_topology_experiment(cfg).to_dict()
+
+
+def test_trunk_conserves_frames():
+    """Every request forwarded out of switch 1's trunk port either reaches
+    the server's egress queue or dies in a counted drop — no frame
+    vanishes between the switches."""
+    cfg = _incast(trunk=LinkConfig(gbps=40.0, latency_ns=2000), dur=0.001)
+    rep = run_topology_experiment(cfg)
+    ex = rep.extras
+    # sw1 trunk egress feeds sw0's forward pipeline toward server port 0
+    fed = ex["sw1_p4_egress_forwarded"]
+    assert fed == ex["sw0_p0_egress_forwarded"] + ex["sw0_p0_egress_drops"]
+    assert ex["sw0_unrouted"] == 0 and ex["sw1_unrouted"] == 0
+
+
+def test_oversubscribed_trunk_concentrates_loss_at_the_trunk_port():
+    """Trunk slower than the aggregate edge rate: the core, not the server
+    edge, is the bottleneck — drops appear at switch 1's trunk egress."""
+    cfg = _incast(trunk=LinkConfig(gbps=2.0, latency_ns=2000), dur=0.001)
+    rep = run_topology_experiment(cfg)
+    assert rep.extras["sw1_p4_egress_drops"] > 0
+    assert rep.extras["sw0_p0_egress_drops"] == 0
+
+
+def test_trunk_port_aqm_marks_at_the_core_bottleneck():
+    """Full-length per_port_aqm covers the two trunk pseudo-ports; ECN on
+    switch 1's trunk egress marks where the oversubscription bites."""
+    n_end = 5                               # 1 node + 4 clients
+    per_port = (None,) * n_end + (None,
+                                  AqmConfig(kind="ecn", min_thresh=2,
+                                            max_thresh=8, max_p=0.2, seed=3))
+    cfg = _incast(trunk=LinkConfig(gbps=2.0, latency_ns=2000), dur=0.001,
+                  pipeline=PipelineConfig(per_port_aqm=per_port))
+    rep = run_topology_experiment(cfg)
+    assert rep.extras["sw1_p4_ecn_marked"] > 0
+
+
+# -- mp crossing packing ------------------------------------------------------
+
+def test_pack_unpack_crossings_roundtrip():
+    f1, f2 = _frame(0xC0A80001, 200), _frame(0xC0A80002, 300)
+    set_ce(f2)
+    crossings = [
+        (0, 1000, (900, 0, 1), "fwd", (3, f1)),
+        (1, 2000, (1900, 1, 2), "deliver", f2),
+        (2, 3000, (2900, 2, 3), "deliver", ("exotic", "payload")),
+    ]
+    metas, buf = _pack_crossings(crossings)
+    back = _unpack_crossings(metas, buf)
+    assert len(back) == 3
+    d0, d1, d2 = back
+    assert d0[:4] == crossings[0][:4] and d0[4][0] == 3
+    assert np.array_equal(d0[4][1], f1)
+    assert d1[:4] == crossings[1][:4]
+    assert np.array_equal(d1[4], f2) and read_ce(d1[4])
+    assert d2 == crossings[2]               # exotic payload rides unpacked
+    # unpacked frames are writable and private (the ECN stage needs both)
+    d0[4][1][12] |= 0x01
+    assert read_ce(d0[4][1]) and not read_ce(f1)
+
+
+def test_pack_crossings_one_contiguous_buffer():
+    frames = [_frame(0xC0A80001, 100 + 10 * i) for i in range(4)]
+    crossings = [(0, i, (0, 0, i), "deliver", f)
+                 for i, f in enumerate(frames)]
+    metas, buf = _pack_crossings(crossings)
+    assert isinstance(buf, bytes)
+    assert len(buf) == sum(len(f) for f in frames)
+    assert bytes(b"".join(f.tobytes() for f in frames)) == buf
+    assert [m[5] for m in metas] == [
+        (sum(len(f) for f in frames[:i]), len(frames[i]))
+        for i in range(4)]
+
+

@@ -1,0 +1,98 @@
+"""Property tests for the AQM/DCTCP surfaces (hypothesis).
+
+Randomized sweeps pin the three invariants the hand-picked cases in
+``test_aqm_pipeline.py`` cannot cover exhaustively:
+
+* the RED curve is monotone non-decreasing in queue depth, 0 below
+  ``min_thresh`` and certain at ``max_thresh``, for any valid band;
+* the DCTCP controller's rate never leaves ``[min_gbps, max_gbps]`` under
+  arbitrary interleavings of sends, clean acks, marked acks, and time gaps;
+* the CE bit survives every header transform the echo path applies —
+  scalar and vectorized — and a frame never gains a mark it wasn't given.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DctcpRateController, PacketPool, red_probability
+from repro.core.packet import (MIN_FRAME, l2fwd_echo, l2fwd_echo_vec,
+                               read_ce, read_ce_vec, set_ce, set_ce_vec,
+                               swap_flow_ips, swap_flow_ips_vec, swap_macs,
+                               swap_macs_vec, write_flow, write_packets_vec)
+
+
+@settings(max_examples=100, deadline=None)
+@given(min_thresh=st.integers(1, 64),
+       band=st.integers(0, 64),
+       max_p=st.floats(0.01, 1.0),
+       d1=st.integers(0, 160), d2=st.integers(0, 160))
+def test_red_probability_monotone_in_depth(min_thresh, band, max_p, d1, d2):
+    max_thresh = min_thresh + band
+    lo, hi = sorted((d1, d2))
+    p_lo = red_probability(lo, min_thresh, max_thresh, max_p)
+    p_hi = red_probability(hi, min_thresh, max_thresh, max_p)
+    assert 0.0 <= p_lo <= p_hi <= 1.0
+    assert red_probability(max_thresh, min_thresh, max_thresh, max_p) == 1.0
+    assert red_probability(min_thresh - 1, min_thresh, max_thresh,
+                           max_p) == 0.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(events=st.lists(
+    st.tuples(st.sampled_from(["send", "ack", "mark", "gap"]),
+              st.integers(1, 50_000)),
+    max_size=60),
+    gain=st.floats(0.01, 1.0),
+    increase=st.floats(0.01, 2.0),
+    max_gbps=st.floats(1.0, 100.0))
+def test_dctcp_rate_never_leaves_its_clamp(events, gain, increase, max_gbps):
+    """Arbitrary mark/loss histories: the rate stays inside the clamp, the
+    running min/max brackets hold, and the emission gap stays positive at
+    every step."""
+    cc = DctcpRateController(rate_gbps=max_gbps / 2, window_ns=10_000,
+                             gain=gain, min_gbps=0.05, max_gbps=max_gbps,
+                             increase_gbps=increase)
+    t = 0
+    sent_ts = []
+    for op, dt in events:
+        t += dt
+        if op == "send":
+            cc.on_send(t)
+            sent_ts.append(t)
+        elif op in ("ack", "mark") and sent_ts:
+            cc.on_ack(t, ce=(op == "mark"), sent_ns=sent_ts.pop(0))
+        else:
+            cc.on_send(t)       # a gap still rolls windows via the clock
+            sent_ts.append(t)
+        assert 0.05 <= cc.rate_gbps <= max_gbps
+        assert cc.rate_min <= cc.rate_gbps <= cc.rate_max
+        assert cc.outstanding >= 0
+        assert cc.gap_ns(1518) > 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(size=st.integers(MIN_FRAME, 1518),
+       src=st.integers(0, 0xFFFFFFFF), dst=st.integers(0, 0xFFFFFFFF),
+       ce=st.booleans())
+def test_ce_bit_survives_header_transforms(size, src, dst, ce):
+    buf = np.zeros(size, dtype=np.uint8)
+    write_flow(buf, src, dst, 1024, 443)
+    if ce:
+        set_ce(buf)
+    for fn in (swap_macs, swap_flow_ips, l2fwd_echo):
+        fn(buf)
+        assert read_ce(buf) is ce
+
+    pool = PacketPool(8, 2048)
+    slots = np.array(pool.alloc_burst(4), dtype=np.int64)
+    sizes = np.full(4, size, dtype=np.int64)
+    write_packets_vec(pool, slots, sizes, seq_start=0, ts_offset=32,
+                      now_ns=0, flow_ids=np.arange(4, dtype=np.int64))
+    if ce:
+        set_ce_vec(pool, slots)
+    for fn in (swap_macs_vec, swap_flow_ips_vec, l2fwd_echo_vec):
+        fn(pool, slots, sizes)
+        marks = read_ce_vec(pool, slots)
+        assert bool(marks.all()) is ce and bool(marks.any()) is ce

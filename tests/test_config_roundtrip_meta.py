@@ -16,8 +16,9 @@ import pytest
 
 import repro.exp.config as exp_config
 import repro.serving.config as serving_config
-from repro.exp.config import (CostConfig, DcaConfig, ExperimentConfig,
-                              LinkConfig, NodeConfig, PoolConfig, PortConfig,
+from repro.exp.config import (AqmConfig, CostConfig, DcaConfig,
+                              ExperimentConfig, LinkConfig, NodeConfig,
+                              PipelineConfig, PoolConfig, PortConfig,
                               RssConfig, StackConfig, SwitchConfig,
                               TopologyConfig, TrafficConfig)
 from repro.serving.config import RequestMixConfig, ServingConfig
@@ -37,6 +38,11 @@ IDS = [c.__name__ for c in CONFIG_CLASSES]
 # one non-default instance per class, so round-trips are exercised on real
 # values (not just defaults the from_dict(**{}) path would mask)
 SAMPLES = {
+    AqmConfig: lambda: AqmConfig(
+        kind="ecn", min_thresh=4, max_thresh=12, max_p=0.25, seed=9),
+    PipelineConfig: lambda: PipelineConfig(
+        aqm=AqmConfig(kind="red", min_thresh=2, max_thresh=6),
+        per_port_aqm=(AqmConfig(kind="ecn"), None)),
     CostConfig: lambda: CostConfig(cpu_ghz=3.0, pmd_poll_cycles=99),
     DcaConfig: lambda: DcaConfig(
         burst_size=8, writeback_threshold=8, writeback_timeout_ns=5000,
@@ -59,16 +65,23 @@ SAMPLES = {
         kind="kernel", burst_size=16, n_lcores=2, per_lcore_bursts=(16, 8),
         cost=CostConfig(cpu_ghz=2.5)),
     SwitchConfig: lambda: SwitchConfig(
-        egress_capacity=8, link=LinkConfig(latency_ns=500)),
+        egress_capacity=8, link=LinkConfig(latency_ns=500),
+        pipeline=PipelineConfig(
+            aqm=AqmConfig(kind="ecn", min_thresh=4, max_thresh=8)),
+        trunk=LinkConfig(gbps=25.0, latency_ns=2000)),
     TrafficConfig: lambda: TrafficConfig(
-        mode="closed_loop", n_packets=10, window=4, seed=3, payload_seed=1,
-        verify_integrity=True),
+        mode="open_loop", rate_gbps=2.5, seed=3, payload_seed=1,
+        verify_integrity=True, cc_mode="dctcp", cc_window_ns=50_000,
+        cc_gain=0.125, cc_min_gbps=0.1, cc_increase_gbps=0.5,
+        cc_max_inflight=16),
     TopologyConfig: lambda: TopologyConfig(
         name="meta-topo",
         nodes=(NodeConfig(name="a"), NodeConfig(name="b")),
         n_clients=2, target="a", client_targets=("a", "b"),
         partition="partitioned", partition_workers=2,
-        partition_sanitize=True),
+        partition_sanitize=True,
+        switch=SwitchConfig(trunk=LinkConfig(gbps=50.0)),
+        node_switch=(0, 0), client_switch=(1, 0)),
     RequestMixConfig: lambda: RequestMixConfig(
         prompt_mean_tokens=64, prompt_dist="fixed", output_mean_tokens=4),
     ServingConfig: lambda: ServingConfig(

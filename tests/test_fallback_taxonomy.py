@@ -87,6 +87,17 @@ def _case_integrity():
     return LoadGen(ports, verify_integrity=True), _bypass(ports), None
 
 
+def _case_dctcp_cc():
+    # a rate controller adapts the emission schedule mid-trial on echo
+    # feedback; the epoch planner precomputes the whole schedule up front
+    from repro.core import DctcpRateController
+    ports = _ports()
+    lg = LoadGen(ports)
+    lg.attach_cc(DctcpRateController(rate_gbps=5.0, window_ns=100_000,
+                                     max_gbps=40.0, max_inflight=8))
+    return lg, _bypass(ports), None
+
+
 def _case_zero_cost():
     ports = _ports()
     srv = BypassL2FwdServer(ports, burst_size=32, n_lcores=1)
@@ -144,6 +155,7 @@ CONFIG_CASES = [
     ("custom-fn", _case_custom_fn, "custom packet-processing function"),
     ("dca-accumulate", _case_dca_accumulate, "DCA accumulate mode"),
     ("integrity", _case_integrity, "integrity verification enabled"),
+    ("dctcp-cc", _case_dctcp_cc, "DCTCP rate-adaptive loadgen active"),
     ("zero-cost", _case_zero_cost, "zero-cost host model"),
     ("burst-gt-max-tx", _case_burst_exceeds_max_tx,
      "lcore burst exceeds loadgen max_tx_burst (TX would linger)"),
@@ -354,7 +366,75 @@ def test_partition_fallback_reasons_cover_the_policy_layer():
             "every-round polling",
             "node 'srv': stack kind 'pipeline' not proven "
             "partition-equivalent",
+            "AQM policy 'ecn' not proven partition-equivalent",
+            "AQM policy 'red' not proven partition-equivalent",
+            "DCTCP rate-adaptive clients adapt on cross-domain echo feedback",
+            "multi-switch trunk fabric not proven partition-equivalent",
             None):
         validate_partition_fallback_reason(reason)
     with pytest.raises(ValueError, match="closed"):
         validate_partition_fallback_reason("node srv is weird")
+
+
+# -- PR 10 partition reasons: triggering configs + refusal parity --------------
+#
+# Each new fabric/loadgen feature is conservatively excluded from partitioned
+# execution until proven equivalent.  The contract per reason: the policy
+# layer names it, the run stamps it, and the "partitioned" run is the
+# shared-clock run bit-for-bit (refusal, never mis-simulation).
+
+def _pr10_topology(**kw):
+    from repro.exp import (LinkConfig, NodeConfig, PoolConfig, SwitchConfig,
+                           TopologyConfig, TrafficConfig)
+    switch_kw = {k: kw.pop(k) for k in ("pipeline", "trunk") if k in kw}
+    traffic_kw = {k: kw.pop(k) for k in ("cc_mode",) if k in kw}
+    return TopologyConfig(
+        name="taxonomy-pr10",
+        nodes=(NodeConfig(name="srv", pool=PoolConfig(n_slots=8192)),),
+        n_clients=2,
+        switch=SwitchConfig(egress_capacity=16,
+                            link=LinkConfig(gbps=10.0, latency_ns=1000),
+                            **switch_kw),
+        traffic=TrafficConfig(mode="open_loop", rate_gbps=2.0,
+                              duration_s=0.0002, packet_size=512, seed=7,
+                              cc_window_ns=100_000, cc_max_inflight=8,
+                              **traffic_kw),
+        target="srv", **kw)
+
+
+def _pr10_cases():
+    from repro.exp import AqmConfig, LinkConfig, PipelineConfig
+    ecn = PipelineConfig(aqm=AqmConfig(kind="ecn", min_thresh=2,
+                                       max_thresh=8, max_p=0.2, seed=1))
+    red = PipelineConfig(aqm=AqmConfig(kind="red", min_thresh=2,
+                                       max_thresh=8, max_p=0.2, seed=1))
+    return [
+        ("aqm-ecn", _pr10_topology(pipeline=ecn),
+         "AQM policy 'ecn' not proven partition-equivalent"),
+        ("aqm-red", _pr10_topology(pipeline=red),
+         "AQM policy 'red' not proven partition-equivalent"),
+        ("dctcp", _pr10_topology(cc_mode="dctcp"),
+         "DCTCP rate-adaptive clients adapt on cross-domain echo feedback"),
+        ("trunk", _pr10_topology(trunk=LinkConfig(gbps=40.0,
+                                                  latency_ns=2000)),
+         "multi-switch trunk fabric not proven partition-equivalent"),
+    ]
+
+
+@pytest.mark.parametrize("name,cfg,reason",
+                         _pr10_cases(), ids=[c[0] for c in _pr10_cases()])
+def test_pr10_partition_reasons_fire_and_refusal_is_bit_identical(
+        name, cfg, reason):
+    from repro.core import PartitionRunInfo
+    from repro.exp import run_topology_experiment
+    from repro.exp.topology import partition_fallback_reason
+
+    assert partition_fallback_reason(cfg) == reason
+    info = PartitionRunInfo()
+    rep = run_topology_experiment(cfg.with_partition("partitioned"),
+                                  partition_info=info)
+    assert info.mode_requested == "partitioned"
+    assert info.mode_used == "shared-clock"
+    assert info.fallback_reason == reason
+    shared = run_topology_experiment(cfg.with_partition("shared-clock"))
+    assert rep.to_dict() == shared.to_dict()
